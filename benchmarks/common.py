@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: the latency/energy model + timing helpers.
+
+The container is CPU-only, so TPU latencies come from the byte/FLOP roofline
+model (v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI/link) — the same
+constants as the dry-run analysis. Measured CPU wall-times are reported
+alongside as functional sanity numbers, never as TPU claims.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIP_POWER_W = 200.0  # v5e-class chip power envelope (energy model)
+
+BF16 = 2
+F32 = 4
+
+
+def bcq_bytes(m: int, n: int, q: int, g: int, scale_bytes: int = 2) -> int:
+    """Packed BCQ footprint of an (m × n) matrix (paper Eq. 3)."""
+    return q * (m * n // 8) + q * (m * n // g) * scale_bytes
+
+
+def matvec_latency_s(weight_bytes: int, io_bytes: int = 0) -> float:
+    """Single-batch matmul is memory-bound: latency ≈ bytes / HBM bandwidth."""
+    return (weight_bytes + io_bytes) / HBM_BW
+
+
+def tp_matvec_latency_s(m: int, n: int, chips: int, dtype_bytes: int = BF16) -> float:
+    """Tensor-parallel dense matvec on `chips` chips: per-chip weight read +
+    the output all-reduce over ICI (ring, 2(n-1)/n)."""
+    w = m * n * dtype_bytes / chips
+    t_mem = w / HBM_BW
+    out_bytes = m * F32
+    t_coll = 0.0
+    if chips > 1:
+        t_coll = out_bytes * 2 * (chips - 1) / chips / ICI_BW
+        t_coll += 2e-6 * np.log2(chips)  # per-hop launch/sync latency
+    return t_mem + t_coll
+
+
+def energy_j(latency_s: float, chips: int) -> float:
+    return latency_s * chips * CHIP_POWER_W
+
+
+def time_call(fn, *args, reps: int = 5) -> float:
+    """Median wall-time (µs) of a jitted callable on this CPU."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,42 @@
+"""Paper Fig. 12: mixed precision — per-sublayer-type (q, g) assignment.
+
+Attention and FFN matrices get independent (q, g) configs (the paper's
+constraint set: q ∈ {3,4,5}, g ∈ {128, 256} here scaled to the small model);
+the Pareto of (compression, PPL) widens vs single-config quantization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.fig5_ppl_tradeoff import _ppl, _train
+from repro.quant import QuantPolicy, quantize_params, quantized_bytes
+
+
+def run() -> list:
+    rows = []
+    cfg, params, corpus = _train(192, 3)
+    base_ppl = _ppl(cfg, params, corpus)
+    base_bytes = quantized_bytes(params)
+    rows.append(csv_row("fig12/dense", 0.0, f"ppl={base_ppl:.3f}"))
+    qs = (3, 4)
+    gs = (64, 128)
+    for qa in qs:
+        for ga in gs:
+            for qf in qs:
+                for gf in gs:
+                    pol = QuantPolicy(attn=(qa, ga), ffn=(qf, gf), iters=5)
+                    qp = quantize_params(params, pol)
+                    ppl = _ppl(cfg, qp, corpus)
+                    ratio = base_bytes / quantized_bytes(qp)
+                    rows.append(
+                        csv_row(
+                            f"fig12/attn_q{qa}g{ga}_ffn_q{qf}g{gf}",
+                            0.0,
+                            f"ppl_deg={ppl-base_ppl:.3f};comp_ratio={ratio:.2f}",
+                        )
+                    )
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig. 8: matmul latency vs group size g (q=4), normalised to row-wise.
+
+The paper's observation — g ≥ 64 is as fast as row-wise because scale bytes
+amortise (Eq. 3: S ∝ 1 + 32/g) — falls straight out of the memory-bound
+roofline; we reproduce the curve and quantify when group-wise starts to cost.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import bcq_bytes, csv_row, matvec_latency_s
+
+
+def run() -> list:
+    rows = []
+    q = 4
+    for m in (4096, 8192, 12288):
+        base = matvec_latency_s(bcq_bytes(m, m, q, g=m))  # row-wise
+        for g in (32, 64, 128, 256, 512, 2048, m):
+            t = matvec_latency_s(bcq_bytes(m, m, q, g=g))
+            rows.append(
+                csv_row(
+                    f"fig8/m{m}/g{g if g != m else 'rowwise'}",
+                    t * 1e6,
+                    f"norm_latency={t/base:.3f}",
+                )
+            )
+    return rows

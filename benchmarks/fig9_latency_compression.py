@@ -1,0 +1,27 @@
+"""Paper Fig. 9: latency is a function of compression ratio alone (m=12288).
+
+Sweep (q, g) pairs; if two pairs give a similar footprint they give a similar
+latency — single-batch quantized matmul is purely memory-bound (paper §III.C).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BF16, bcq_bytes, csv_row, matvec_latency_s
+
+
+def run() -> list:
+    rows = []
+    m = 12288
+    dense = m * m * BF16
+    for q in (1, 2, 3, 4, 5):
+        for g in (32, 64, 128, 256, 1024, m):
+            b = bcq_bytes(m, m, q, g)
+            t = matvec_latency_s(b)
+            rows.append(
+                csv_row(
+                    f"fig9/q{q}_g{g if g != m else 'rowwise'}",
+                    t * 1e6,
+                    f"comp_ratio={dense/b:.2f};bytes_mb={b/2**20:.1f}",
+                )
+            )
+    return rows

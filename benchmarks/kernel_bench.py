@@ -1,0 +1,40 @@
+"""Kernel micro-bench: LUT-GEMM vs unpack-MXU variant vs dense ref (CPU
+functional timings + modeled TPU bytes). Informs the DESIGN.md §2 claim that
+the unpack variant is the better TPU mapping."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BF16, bcq_bytes, csv_row, time_call
+from repro.core import quantize_tensor
+from repro.kernels.ops import quantized_matmul
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    m, q, g = 1024, 4, 128
+    w = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, m)), jnp.float32)
+    qt = quantize_tensor(w, q, g, iters=1, scale_dtype=jnp.float32)
+    fns = {
+        "ref_dequant_dot": jax.jit(lambda x: quantized_matmul(x, qt, impl="ref")),
+        "pallas_bcq_mm_interpret": lambda x: quantized_matmul(
+            x, qt, impl="bcq_mm", interpret=True
+        ),
+        "pallas_lutgemm_interpret": lambda x: quantized_matmul(
+            x, qt, impl="lutgemm", interpret=True
+        ),
+    }
+    for name, fn in fns.items():
+        rows.append(
+            csv_row(
+                f"kernel/{name}/m{m}_q{q}_g{g}",
+                time_call(fn, x, reps=3),
+                f"hbm_bytes_model={bcq_bytes(m, m, q, g)};dense={m*m*BF16}",
+            )
+        )
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. TPU numbers come from the v5e
+roofline model (this container is CPU-only); CPU wall-times are functional
+sanity checks only. Run: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip training-based figs")
+    ap.add_argument("--only", default=None, help="comma-list of module tags")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig8_group_latency,
+        fig9_latency_compression,
+        kernel_bench,
+        table3_memory_latency,
+        table4_tp_vs_quant,
+        table5_gpt3,
+    )
+
+    modules = [
+        ("table3", table3_memory_latency),
+        ("fig8", fig8_group_latency),
+        ("fig9", fig9_latency_compression),
+        ("table4", table4_tp_vs_quant),
+        ("table5", table5_gpt3),
+        ("kernel", kernel_bench),
+    ]
+    if not args.fast:
+        from benchmarks import fig5_ppl_tradeoff, fig12_mixed_precision
+
+        modules += [("fig5", fig5_ppl_tradeoff), ("fig12", fig12_mixed_precision)]
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = [(t, m) for t, m in modules if t in keep]
+
+    print("name,us_per_call,derived")
+    for tag, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
+        print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

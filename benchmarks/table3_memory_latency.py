@@ -1,0 +1,63 @@
+"""Paper Table III: memory footprint + single-batch matmul latency,
+dense (cuBLAS-analogue) vs BCQ (nuQmm/LUT-GEMM), (m×m)·(m×1).
+
+Ours targets TPU v5e with a bf16 dense baseline (paper §VI: vs their FP32
+numbers, reductions halve). Latency from the memory-bound roofline model;
+measured CPU µs of the jnp reference path included as a functional check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BF16,
+    bcq_bytes,
+    csv_row,
+    matvec_latency_s,
+    time_call,
+)
+from repro.core import quantize_tensor
+from repro.kernels.ops import quantized_matmul
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m in (2048, 4096, 8192, 12288):
+        dense_bytes = m * m * BF16
+        t_dense = matvec_latency_s(dense_bytes, io_bytes=2 * m * BF16)
+        rows.append(
+            csv_row(
+                f"table3/dense_bf16/m{m}",
+                t_dense * 1e6,
+                f"mem_mb={dense_bytes/2**20:.2f};model=tpu-roofline",
+            )
+        )
+        for q in (2, 3, 4, 5):
+            b = bcq_bytes(m, m, q, g=m)  # row-wise, as in Table III
+            t = matvec_latency_s(b, io_bytes=2 * m * BF16)
+            rows.append(
+                csv_row(
+                    f"table3/bcq_q{q}/m{m}",
+                    t * 1e6,
+                    f"mem_mb={b/2**20:.2f};mem_red={dense_bytes/b:.1f}x;"
+                    f"speedup={t_dense/t:.1f}x",
+                )
+            )
+    # functional CPU sample (small m): packed path vs dense, measured
+    m = 2048
+    w = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, m)), jnp.float32)
+    qt = quantize_tensor(w, 4, m, iters=1, scale_dtype=jnp.float32)
+    f_dense = jax.jit(lambda x: x @ w)
+    f_q = jax.jit(lambda x: quantized_matmul(x, qt, impl="ref"))
+    rows.append(
+        csv_row("table3/cpu_dense_measured/m2048", time_call(f_dense, x), "functional")
+    )
+    rows.append(
+        csv_row("table3/cpu_bcq_ref_measured/m2048", time_call(f_q, x), "functional")
+    )
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Table IV / Fig. 10: tensor parallelism (dense) vs 1-chip quantized.
+
+The paper's core systems claim: TP speedup is sub-linear (collectives +
+tall-skinny matmuls) while quantization shrinks the model onto fewer chips at
+full efficiency. Reproduced with the v5e latency model: dense bf16 (m×m)·(m×1)
+on 1..8 chips vs BCQ q∈{2,4} on one chip, with the 200 W/chip energy model.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    BF16,
+    bcq_bytes,
+    csv_row,
+    energy_j,
+    matvec_latency_s,
+    tp_matvec_latency_s,
+)
+
+
+def run() -> list:
+    rows = []
+    for m in (8192, 12288, 16384):
+        t1 = tp_matvec_latency_s(m, m, 1)
+        e1 = energy_j(t1, 1)
+        for chips in (1, 2, 4, 8):
+            t = tp_matvec_latency_s(m, m, chips)
+            e = energy_j(t, chips)
+            comm_frac = 1 - (m * m * BF16 / chips / 819e9) / t
+            rows.append(
+                csv_row(
+                    f"table4/dense_tp{chips}/m{m}",
+                    t * 1e6,
+                    f"speedup={t1/t:.2f}x;comm_frac={comm_frac:.2%};"
+                    f"norm_energy={e/e1:.2f}",
+                )
+            )
+        for q in (2, 4):
+            tq = matvec_latency_s(bcq_bytes(m, m, q, g=m))
+            eq_ = energy_j(tq, 1)
+            rows.append(
+                csv_row(
+                    f"table4/bcq_q{q}_1chip/m{m}",
+                    tq * 1e6,
+                    f"speedup={t1/tq:.2f}x;comm_frac=0%;norm_energy={eq_/e1:.2f}",
+                )
+            )
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Table V: GPT-3 175B (m = 12288) — the 4 major matmuls per layer,
+speed-up + normalised energy for BCQ q∈{2,4} vs the dense baseline, plus the
+8-chip dense TP comparison. Paper (FP32 baseline): q=2 total 14.41×, energy
+0.07; our bf16 baseline should land near half the speed-up (paper §VI).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    bcq_bytes,
+    csv_row,
+    energy_j,
+    matvec_latency_s,
+    tp_matvec_latency_s,
+)
+
+M = 12288
+LAYERS = [
+    ("qkv", 3 * M, M),
+    ("attn_out", M, M),
+    ("ffn1", M, 4 * M),
+    ("ffn2", 4 * M, M),
+]
+
+
+def run() -> list:
+    rows = []
+    tot = {"dense1": 0.0, "dense8": 0.0, "q2": 0.0, "q4": 0.0}
+    for name, mm, nn in LAYERS:
+        t1 = tp_matvec_latency_s(mm, nn, 1)
+        t8 = tp_matvec_latency_s(mm, nn, 8)
+        tq2 = matvec_latency_s(bcq_bytes(mm, nn, 2, g=mm))
+        tq4 = matvec_latency_s(bcq_bytes(mm, nn, 4, g=mm))
+        tot["dense1"] += t1
+        tot["dense8"] += t8
+        tot["q2"] += tq2
+        tot["q4"] += tq4
+        e1 = energy_j(t1, 1)
+        for tag, t, chips in (("dense_tp8", t8, 8), ("bcq_q2", tq2, 1), ("bcq_q4", tq4, 1)):
+            rows.append(
+                csv_row(
+                    f"table5/{name}/{tag}",
+                    t * 1e6,
+                    f"speedup={t1/t:.2f}x;norm_energy={energy_j(t, chips)/e1:.2f}",
+                )
+            )
+    e1 = energy_j(tot["dense1"], 1)
+    rows.append(
+        csv_row(
+            "table5/total/dense_tp8", tot["dense8"] * 1e6,
+            f"speedup={tot['dense1']/tot['dense8']:.2f}x;"
+            f"norm_energy={energy_j(tot['dense8'], 8)/e1:.2f}",
+        )
+    )
+    for q in (2, 4):
+        t = tot[f"q{q}"]
+        rows.append(
+            csv_row(
+                f"table5/total/bcq_q{q}", t * 1e6,
+                f"speedup={tot['dense1']/t:.2f}x;"
+                f"norm_energy={energy_j(t, 1)/e1:.2f};"
+                f"paper_fp32_speedup={'14.41x' if q == 2 else '7.50x'}",
+            )
+        )
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Fig. 12: mixed-precision (q, g) search over sublayer types.
+
+Trains a small LM, then explores per-sublayer (attention vs FFN vs LM head)
+BCQ configs and prints the (compression, PPL) Pareto frontier.
+
+PYTHONPATH=src python examples/mixed_precision_search.py
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import MarkovCorpus, batch_iterator
+from repro.models import forward, init_params, reduced
+from repro.quant import QuantPolicy, quantize_params, quantized_bytes
+from repro.train import adamw_init, cross_entropy, make_train_step
+
+
+def main():
+    cfg = reduced(
+        get_config("llama3.2-3b"), d_model=192, n_layers=3, n_kv_heads=4,
+        d_ff=512, vocab=512,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, lr=2e-3))
+    corpus = MarkovCorpus(cfg.vocab, seed=5)
+    it = batch_iterator(corpus, batch=16, seq_len=64)
+    for _ in range(100):
+        b = next(it)
+        params, opt, _ = step(params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+
+    eval_fn = jax.jit(lambda p, t, l: cross_entropy(forward(cfg, p, tokens=t)[0], l))
+    ev = batch_iterator(corpus, batch=16, seq_len=64, seed=777)
+    def ppl(p):
+        nll = [float(eval_fn(p, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])))
+               for b in (next(ev) for _ in range(3))]
+        return float(np.exp(np.mean(nll)))
+
+    base_ppl, base_bytes = ppl(params), quantized_bytes(params)
+    print(f"dense: ppl={base_ppl:.3f}")
+    results = []
+    grid = [(3, 64), (4, 64), (4, 128), (5, 128)]
+    for attn_cfg, ffn_cfg in itertools.product(grid, grid):
+        pol = QuantPolicy(attn=attn_cfg, ffn=ffn_cfg, iters=5)
+        qp = quantize_params(params, pol)
+        r = base_bytes / quantized_bytes(qp)
+        d = ppl(qp) - base_ppl
+        results.append((r, d, attn_cfg, ffn_cfg))
+        print(f"attn(q,g)={attn_cfg} ffn(q,g)={ffn_cfg}: comp={r:.2f}x ppl_deg={d:+.3f}")
+
+    print("\nPareto frontier (max compression at each PPL budget):")
+    results.sort(key=lambda t: (-t[0], t[1]))
+    best = np.inf
+    for r, d, a, f in results:
+        if d < best:
+            best = d
+            print(f"  comp={r:.2f}x ppl_deg={d:+.3f} attn={a} ffn={f}")
+
+
+if __name__ == "__main__":
+    main()

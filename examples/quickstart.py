@@ -1,0 +1,29 @@
+"""Quickstart: group-wise BCQ quantization + LUT-GEMM in ~30 lines.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression_ratio, quantize_tensor
+from repro.kernels import quantized_matmul
+
+rng = np.random.default_rng(0)
+
+# a weight matrix and a single-token activation (the paper's generation stage)
+w = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+x = jnp.asarray(rng.standard_normal((1, 4096)), jnp.float32)
+
+# quantize: q=4 bits, scale shared by groups of g=128 weights (paper §III.A)
+qt = quantize_tensor(w, q=4, g=128, iters=8)
+dense_bytes = w.size * 2  # bf16 baseline
+print(f"packed {dense_bytes/2**20:.1f} MiB (bf16) -> {qt.nbytes()/2**20:.1f} MiB "
+      f"(~{compression_ratio(4, 128):.1f}x, paper Eq. 3)")
+
+# the memory-bound matvec runs straight off the packed format
+y_dense = x @ w
+for impl in ("ref", "bcq_mm", "lutgemm"):  # oracle, TPU-native, paper-faithful
+    y = quantized_matmul(x, qt, impl=impl, interpret=True)
+    rel = float(jnp.linalg.norm(y - y_dense) / jnp.linalg.norm(y_dense))
+    print(f"{impl:8s}: rel error vs dense = {rel:.4f}")

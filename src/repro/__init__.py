@@ -1,0 +1,19 @@
+"""repro: LUT-GEMM / nuQmm — group-wise BCQ quantized inference framework in JAX.
+
+Implements the paper "LUT-GEMM: Quantized Matrix Multiplication based on LUTs
+for Efficient Inference in Large-Scale Generative Language Models"
+(a.k.a. nuQmm, arXiv:2206.09557) as a production-grade multi-pod framework:
+
+- ``repro.core``     group-wise binary-coding quantization (BCQ) math
+- ``repro.kernels``  Pallas TPU kernels (LUT-GEMM + variants) with jnp oracles
+- ``repro.models``   decoder-model zoo (dense / MoE / VLM / audio / hybrid / sLSTM)
+- ``repro.quant``    model-level quantization + mixed precision policies
+- ``repro.parallel`` mesh + sharding rules (DP/FSDP/TP/EP/SP, multi-pod)
+- ``repro.train``    optimizer, train loop, checkpointing, fault tolerance
+- ``repro.infer``    prefill/decode split engine (paper Fig. 13)
+- ``repro.analysis`` HLO collective parsing + roofline model
+- ``repro.configs``  assigned architecture configs
+- ``repro.launch``   mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: HLO collective parsing + roofline model."""
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import HW, Roofline, roofline
+
+__all__ = ["HW", "Roofline", "collective_bytes", "roofline"]

@@ -1,0 +1,98 @@
+"""Parse collective-communication bytes out of post-SPMD HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we sweep the
+compiled module for every ``all-gather`` / ``all-reduce`` / ``reduce-scatter``
+/ ``all-to-all`` / ``collective-permute`` (sync and ``-start`` async forms) and
+sum their result-shape bytes. Per-op wire-byte multipliers for ring algorithms
+are applied separately in the roofline (see ``roofline.py``).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# result of an HLO op: `%name = <shape-or-tuple> op-name(...)`
+_LINE_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>" + "|".join(COLLECTIVE_KINDS) + r")(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, .]+?)[\}\]]")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group (for ring wire-byte factors)."""
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split(",")
+        return max(1, len([x for x in first if x.strip() != ""]))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """→ {kind: {"count", "bytes", "wire_bytes"}} from post-SPMD HLO.
+
+    ``bytes`` sums result-shape bytes (the assignment's collective_bytes).
+    ``wire_bytes`` applies ring-algorithm factors per op:
+      all-reduce 2(n-1)/n · b, all-gather/reduce-scatter (n-1)/n · b,
+      all-to-all (n-1)/n · b, collective-permute 1 · b.
+    """
+    out: Dict[str, dict] = {
+        k: {"count": 0, "bytes": 0, "wire_bytes": 0.0} for k in COLLECTIVE_KINDS
+    }
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue  # count async ops once, at -start
+        kind = m.group("op")
+        b = _shape_bytes(m.group("shapes"))
+        n = _group_size(line)
+        factor = {
+            "all-reduce": 2.0 * (n - 1) / max(n, 1),
+            "all-gather": (n - 1) / max(n, 1),
+            "reduce-scatter": (n - 1) / max(n, 1),
+            "all-to-all": (n - 1) / max(n, 1),
+            "collective-permute": 1.0,
+        }[kind]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+        out[kind]["wire_bytes"] += b * factor
+    return out
+
+
+def total_collective_bytes(stats: Dict[str, dict], wire: bool = False) -> float:
+    key = "wire_bytes" if wire else "bytes"
+    return float(sum(v[key] for v in stats.values()))

@@ -1,0 +1,237 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the cell JSONs.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+Writes experiments/roofline_table.md (included by EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def weight_bytes_per_chip(arch: str, quant_q: int, serve: bool = True) -> float:
+    """Per-chip weight bytes under the serving sharding (TP-16, no FSDP).
+
+    Used to derive the fused-kernel memory term for quantized serve cells:
+    ``adjusted(q) = measured_bytes(dense cell) − w_dense_pc + w_packed_pc`` —
+    the Pallas kernel path reads packed bytes where the dense path reads bf16,
+    everything else (caches, activations) identical.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.qtensor import QuantizedTensor
+    from repro.models import init_params
+    from repro.parallel import param_specs, single_pod_axes
+    from repro.quant import QuantPolicy, quantized_structs
+
+    cfg = get_config(arch)
+    ax = single_pod_axes()
+    if serve:
+        ax = dataclasses.replace(ax, fsdp=None)
+    structs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if quant_q:
+        structs = quantized_structs(structs, QuantPolicy(q=quant_q, g=128))
+    specs = param_specs(cfg, ax)
+
+    total = 0.0
+
+    def visit(struct, spec):
+        nonlocal total
+        if isinstance(struct, QuantizedTensor):
+            from repro.parallel.sharding import qt_specs_like
+
+            qspec = qt_specs_like(spec, struct, ax)
+            for leaf, sp in ((struct.packed, qspec.packed), (struct.scales, qspec.scales)):
+                shards = 1
+                for axis in tuple(sp):
+                    if axis is not None:
+                        shards *= ax.size(axis)
+                total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize / shards
+            return
+        shards = 1
+        for axis in tuple(spec):
+            if axis is not None:
+                shards *= ax.size(axis)
+        total += int(np.prod(struct.shape)) * struct.dtype.itemsize / shards
+
+    jax.tree.map(
+        visit, structs, specs,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor),
+    )
+    return total
+
+
+def kernel_adjusted_memory(cells) -> dict:
+    """{(arch, shape, mesh, q): adjusted_memory_s} for quantized serve cells,
+    by differencing the measured dense sibling."""
+    import functools
+
+    by_key = {(c["arch"], c["shape"], c["mesh"], c["quant_q"]): c for c in cells}
+    wpc = functools.lru_cache(maxsize=None)(weight_bytes_per_chip)
+    out = {}
+    for c in cells:
+        q = c["quant_q"]
+        if not q or c["meta"]["kind"] not in ("decode", "prefill"):
+            continue
+        dense = by_key.get((c["arch"], c["shape"], c["mesh"], 0))
+        if dense is None:
+            continue
+        uses = c["meta"].get("weight_uses", 1)
+        adj_bytes = (
+            dense["roofline"]["bytes_per_chip"]
+            - uses * wpc(c["arch"], 0)
+            + uses * wpc(c["arch"], q)
+        )
+        out[(c["arch"], c["shape"], c["mesh"], q)] = max(adj_bytes, 0.0) / 819e9
+    return out
+
+
+def load_cells(dir_: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def _fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(cells, mesh: str = "single") -> str:
+    adj = kernel_adjusted_memory(cells)
+    rows = [
+        "| arch | shape | q | compute | memory | mem (TPU kernel) | collective "
+        "| dominant | MFU-bound | useful-FLOPs | bytes/chip | coll-wire/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    sel = [c for c in cells if c["mesh"] == mesh]
+    sel.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9), c["quant_q"]))
+    for c in sel:
+        r = c["roofline"]
+        mfu = r.get("mfu_bound")
+        ufr = r.get("useful_flops_ratio")
+        a = adj.get((c["arch"], c["shape"], c["mesh"], c["quant_q"]))
+        rows.append(
+            "| {arch} | {shape} | {q} | {c} | {m} | {a} | {co} | **{dom}** | {mfu} | {ufr} | {b} | {w} |".format(
+                arch=c["arch"],
+                shape=c["shape"],
+                q=c["quant_q"] or "bf16",
+                c=_fmt_s(r["compute_s"]),
+                m=_fmt_s(r["memory_s"]),
+                a=_fmt_s(a) if a is not None else "–",
+                co=_fmt_s(r["collective_s"]),
+                dom=r["dominant"],
+                mfu=f"{mfu:.1%}" if mfu else "–",
+                ufr=f"{ufr:.2f}" if ufr else "–",
+                b=_fmt_b(r["bytes_per_chip"]),
+                w=_fmt_b(r["coll_bytes_per_chip"]),
+            )
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    rows = [
+        "| arch | shape | mesh | q | chips | args/chip | temp/chip | compile | "
+        "AR | AG | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    sel = sorted(
+        cells, key=lambda c: (c["arch"], order.get(c["shape"], 9), c["mesh"], c["quant_q"])
+    )
+    for c in sel:
+        m = c["memory_analysis"]
+        coll = c["trip_aware"]["collectives"]
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {q} | {chips} | {a} | {t} | {cs:.0f}s "
+            "| {ar} | {ag} | {rs} | {a2a} | {cp} |".format(
+                arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+                q=c["quant_q"] or "bf16", chips=c["chips"],
+                a=_fmt_b(m["argument_size"] or 0),
+                t=_fmt_b(m["temp_size"] or 0),
+                cs=c["compile_s"],
+                ar=_fmt_b(coll["all-reduce"]["bytes"]),
+                ag=_fmt_b(coll["all-gather"]["bytes"]),
+                rs=_fmt_b(coll["reduce-scatter"]["bytes"]),
+                a2a=_fmt_b(coll["all-to-all"]["bytes"]),
+                cp=_fmt_b(coll["collective-permute"]["bytes"]),
+            )
+        )
+    return "\n".join(rows)
+
+
+def bottleneck_summary(cells) -> str:
+    """One line per single-pod cell: what would move the dominant term down."""
+    hints = {
+        ("collective", "train"): "sequence-parallel TP + bf16 grad reduce-scatter",
+        ("collective", "prefill"): "sequence-parallel TP (RS+AG instead of AR of full activations)",
+        ("collective", "decode"): "kill weight re-gathers; duplicate-free TP layout",
+        ("memory", "train"): "larger microbatch / fused attention to cut activation traffic",
+        ("memory", "prefill"): "flash-attention Pallas kernel (no S×S logits materialisation)",
+        ("memory", "decode"): "lower q bits / larger g (paper Eq. 3); fused BCQ kernel path",
+        ("memory", "long"): "lower q bits; recurrent-state layout",
+        ("compute", "train"): "reduce remat recompute (policy dots_saveable)",
+        ("compute", "prefill"): "causal-only attention FLOPs (flash kernel)",
+        ("compute", "decode"): "already compute-light; batch more requests",
+    }
+    out = []
+    for c in cells:
+        if c["mesh"] != "single":
+            continue
+        r = c["roofline"]
+        kind = c["meta"]["kind"]
+        hint = hints.get((r["dominant"], kind), "—")
+        out.append(
+            f"- **{c['arch']} × {c['shape']} (q={c['quant_q'] or 'bf16'})**: "
+            f"{r['dominant']}-bound at {_fmt_s(r['bound_s'])}; ↓ via {hint}."
+        )
+    return "\n".join(sorted(out))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline_table.md")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    parts = [
+        "# Roofline tables (generated by repro.analysis.report)\n",
+        "## Single-pod (16×16 = 256 chips), v5e constants "
+        "(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link)\n",
+        roofline_table(cells, "single"),
+        "\n## Multi-pod (2×16×16 = 512 chips)\n",
+        roofline_table(cells, "multi"),
+        "\n## Dry-run record (memory analysis + collective schedule)\n",
+        dryrun_table(cells),
+        "\n## Per-cell bottleneck → what moves it down\n",
+        bottleneck_summary(cells),
+        "",
+    ]
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

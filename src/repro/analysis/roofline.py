@@ -1,0 +1,110 @@
+"""Three-term roofline model for TPU v5e (targets; container is CPU-only).
+
+    compute term    = HLO_FLOPs    / (chips × 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes    / (chips × 819e9  B/s HBM)
+    collective term = coll_bytes   / (chips × 50e9   B/s per ICI link)
+
+``cost_analysis()`` of a GSPMD-partitioned module reports the **per-device**
+program, so the per-chip terms divide by one chip's peak (dividing total work
+by total peak is the same number). The dominant term approximates step latency
+if compute/memory/communication overlapped perfectly; their max→sum range
+brackets reality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip (TPU v5e)
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+
+
+V5E = HW()
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: Optional[float] = None  # 6·N·D (active N for MoE), whole step
+    chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPS — remat/dequant/redundancy overhead lens."""
+        if self.model_flops is None or self.flops_per_chip <= 0:
+            return None
+        return self.model_flops / (self.flops_per_chip * self.chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilisation if the step ran exactly at the roofline."""
+        if self.model_flops is None or self.bound_s <= 0:
+            return None
+        hw_flops = self.chips * V5E.peak_flops * self.bound_s
+        return self.model_flops / hw_flops
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "chips": self.chips,
+        }
+
+
+def roofline(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+    *,
+    chips: int,
+    model_flops: Optional[float] = None,
+    hw: HW = V5E,
+) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_chip / hw.peak_flops,
+        memory_s=bytes_per_chip / hw.hbm_bw,
+        collective_s=coll_bytes_per_chip / hw.ici_bw,
+        flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        coll_bytes_per_chip=coll_bytes_per_chip,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_estimate(n_params_active: int, tokens: int, training: bool) -> float:
+    """6·N·D for a train step (fwd+bwd); 2·N·D for inference-only steps."""
+    per_tok = 6 if training else 2
+    return float(per_tok) * n_params_active * tokens

@@ -1,0 +1,23 @@
+"""Core group-wise binary-coding quantization (BCQ) math."""
+
+from repro.core.bcq import (
+    bcq_error,
+    compression_ratio,
+    dequantize,
+    quantize_bcq,
+    quantize_bcq_greedy,
+)
+from repro.core.packing import pack_signs, unpack_signs
+from repro.core.qtensor import QuantizedTensor, quantize_tensor
+
+__all__ = [
+    "QuantizedTensor",
+    "bcq_error",
+    "compression_ratio",
+    "dequantize",
+    "pack_signs",
+    "quantize_bcq",
+    "quantize_bcq_greedy",
+    "quantize_tensor",
+    "unpack_signs",
+]

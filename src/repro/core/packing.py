@@ -1,0 +1,38 @@
+"""Bit-packing of BCQ binary codes.
+
+The LUT-GEMM kernel consumes binary matrices as packed bytes: each uint8 holds
+``μ = 8`` consecutive {-1,+1} codes along the reduction dimension (LSB-first),
+so a byte is directly a LUT *key* (paper Table II / §III.B).
+
+Layout: codes ``(q, k, o)`` → packed ``(q, k // 8, o)`` uint8, keeping the
+output dimension minor so TPU lanes (128-wide) vectorise over output columns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MU = 8  # paper's practical LUT sub-vector length (§III.B: "μ = 8 is used")
+
+
+def pack_signs(binary: jax.Array) -> jax.Array:
+    """Pack {-1,+1} int8 codes ``(..., k, o)`` → uint8 ``(..., k//8, o)``.
+
+    Bit ``j`` of byte ``c`` is 1 iff ``binary[..., 8*c + j, :] == +1`` (LSB-first).
+    """
+    *lead, k, o = binary.shape
+    if k % MU != 0:
+        raise ValueError(f"reduction dim {k} must be a multiple of {MU}")
+    bits = (binary > 0).astype(jnp.uint8).reshape(*lead, k // MU, MU, o)
+    weights = (jnp.uint8(1) << jnp.arange(MU, dtype=jnp.uint8))  # LSB-first
+    return jnp.sum(bits * weights[:, None], axis=-2, dtype=jnp.uint8)
+
+
+def unpack_signs(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_signs`: uint8 ``(..., k//8, o)`` → int8 ``(..., k, o)``."""
+    *lead, kc, o = packed.shape
+    shifts = jnp.arange(MU, dtype=jnp.uint8)
+    bits = (packed[..., :, None, :] >> shifts[:, None]) & jnp.uint8(1)
+    signs = (2 * bits.astype(jnp.int8) - 1).reshape(*lead, kc * MU, o)
+    return signs

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic corpora + host-sharded loaders."""
+
+from repro.data.synthetic import MarkovCorpus, batch_iterator
+
+__all__ = ["MarkovCorpus", "batch_iterator"]

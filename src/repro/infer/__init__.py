@@ -1,0 +1,5 @@
+"""Inference engine: prefill/decode split with quantized weights (paper Fig. 13)."""
+
+from repro.infer.engine import Engine
+
+__all__ = ["Engine"]

@@ -1,0 +1,130 @@
+"""Blocked causal flash attention (Pallas TPU) — the prefill memory lever.
+
+The XLA fallback materialises (B, H, chunk, S) f32 logits and crosses fusion
+boundaries ~5× per softmax (measured ~830 GB/chip on olmoe prefill_32k —
+EXPERIMENTS.md §Perf cell B-iter 2). This kernel keeps the (block_q, block_k)
+score tile in VMEM with the standard online-softmax recurrence
+(Flash-Attention 2 schedule):
+
+    grid = (B·H, n_q_blocks, n_k_blocks)   k innermost (sequential on TPU)
+    carry (VMEM scratch): m (running max), l (running denom), acc (block_q, Dh)
+
+Causality is handled per-tile: tiles entirely in the future are skipped via
+``pl.when`` (no FLOPs counted on TPU — unlike the masked-dense fallback, which
+does 2× the causal-useful work); the diagonal tile applies the triangular
+mask. GQA is supported by mapping each of the B·H grid rows to its KV head.
+
+Validated against the jnp oracle in interpret mode (tests/test_flash_attn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, scale):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip tiles strictly in the future (block-level causality)
+    @pl.when(ik * bk <= iq * bq + bq - 1)
+    def _compute():
+        q = q_ref[0]  # (bq, dh)
+        k = k_ref[0]  # (bk, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        # mask within the diagonal tile
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])  # (bq, bk)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal flash attention. q: (B, S, H, Dh); k, v: (B, S, Hkv, Dh), GQA.
+
+    Returns (B, S, H, Dh) in q's dtype. S must divide by both block sizes
+    (model seq lens are powers of two; callers pad otherwise).
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    grp = h // hkv
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} must divide block sizes ({block_q},{block_k})")
+    scale = 1.0 / (dh ** 0.5)
+
+    # layout: fold batch×head into the leading grid dim
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+
+    grid = (b * h, s // block_q, s // block_k)
+    kernel = functools.partial(
+        _flash_kernel, bq=block_q, bk=block_k, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec(
+                (1, block_k, dh), lambda bh, iq, ik, g=grp: (bh // g, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, dh), lambda bh, iq, ik, g=grp: (bh // g, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,126 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+``quantized_matmul`` is THE entry point the rest of the framework uses for
+``x @ W`` against a :class:`~repro.core.qtensor.QuantizedTensor`:
+
+- ``impl="ref"``      pure-jnp dequantize+dot (XLA-fusable). Used by models on
+                      CPU and by the dry-run lowering — on a real TPU deployment
+                      this HLO region is replaced by the Pallas kernels below.
+- ``impl="bcq_mm"``   fused unpack→scale→MXU Pallas kernel (TPU-native variant).
+- ``impl="lutgemm"``  paper-faithful LUT kernel.
+- ``impl="auto"``     bcq_mm on TPU backends, ref elsewhere.
+
+The wrapper normalises leading batch dims, pads B to the sublane width and the
+output dim to the lane-block width, and slices the result back, so callers are
+shape-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QuantizedTensor
+from repro.kernels.bcq_mm import bcq_mm as _bcq_mm
+from repro.kernels.lutgemm import lutgemm as _lutgemm
+from repro.kernels.ref import bcq_mm_ref as _bcq_mm_ref
+
+_SUBLANE = 8
+
+
+def _pick_block(dim: int, candidates=(512, 256, 128, 64)) -> int:
+    for c in candidates:
+        if dim % c == 0:
+            return c
+    return 0  # caller pads
+
+
+def quantized_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """``x (..., k) @ qt (k, o)`` → ``(..., o)``."""
+    if impl == "auto":
+        impl = "bcq_mm" if jax.default_backend() == "tpu" else "ref"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out_dtype = out_dtype or x.dtype
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if k != qt.k:
+        raise ValueError(f"x reduction dim {k} != weight k {qt.k}")
+    xb = x.reshape(-1, k)
+    B = xb.shape[0]
+
+    if impl == "ref":
+        # materialise the reconstruction in x's dtype: bf16 activations get a
+        # bf16 dequant (serving path); f32 activations keep the f32 oracle
+        w = qt.dequantize(dtype=x.dtype)
+        y = jnp.dot(xb, w, preferred_element_type=jnp.float32)
+        return y.reshape(*lead, qt.o).astype(out_dtype)
+
+    # --- Pallas paths: pad B to sublane, o to a lane block ---
+    block_k = _pick_block(qt.k)
+    if block_k == 0:
+        raise ValueError(f"k={qt.k} must be divisible by 64 for the Pallas path")
+    packed, scales, o = qt.packed, qt.scales, qt.o
+    block_o = _pick_block(o)
+    if block_o == 0:
+        block_o = 128
+        pad_o = -o % block_o
+        packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad_o)))
+        scales = jnp.pad(scales, ((0, 0), (0, 0), (0, pad_o)))
+        o = o + pad_o
+    pad_b = -B % _SUBLANE
+    if pad_b:
+        xb = jnp.pad(xb, ((0, pad_b), (0, 0)))
+    # a scale group must not be finer than the k-block constraint allows
+    if qt.g <= block_k and block_k % qt.g:
+        block_k = qt.g if qt.g in (64, 128, 256, 512) else _pick_block(qt.k, (qt.g,))
+        if not block_k:
+            raise ValueError(f"g={qt.g} incompatible with k={qt.k} Pallas tiling")
+
+    fn = {"bcq_mm": _bcq_mm, "lutgemm": _lutgemm}[impl]
+    y = fn(
+        xb,
+        packed,
+        scales,
+        g=qt.g,
+        block_k=block_k,
+        block_o=block_o,
+        interpret=interpret,
+    )
+    y = y[:B, : qt.o]
+    return y.reshape(*lead, qt.o).astype(out_dtype)
+
+
+def linear(
+    x: jax.Array,
+    w,
+    b: Optional[jax.Array] = None,
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> jax.Array:
+    """Uniform linear layer: ``w`` is a dense (k, o) array OR a QuantizedTensor.
+
+    Every linear in the model zoo routes through here — the paper's technique as
+    a first-class, per-layer-switchable feature.
+    """
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, QuantizedTensor):
+        y = quantized_matmul(x, w, impl=impl, out_dtype=out_dtype)
+    else:
+        y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
+            out_dtype
+        )
+    if b is not None:
+        y = y + b.astype(out_dtype)
+    return y

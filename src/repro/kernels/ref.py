@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against, and
+also the CPU fallback path used by models during smoke tests (fast under XLA:CPU,
+no interpret-mode overhead).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcq as bcq_lib
+from repro.core import packing
+
+
+def bcq_mm_ref(x: jax.Array, packed: jax.Array, scales: jax.Array, g: int) -> jax.Array:
+    """Oracle for both ``bcq_mm`` and ``lutgemm``:  y = x @ dequantize(W).
+
+    x: (B, k); packed: (q, k//8, o) uint8; scales: (q, k//g, o). Returns (B, o) f32.
+    """
+    signs = packing.unpack_signs(packed)  # (q, k, o) int8
+    w = bcq_lib.dequantize(scales.astype(jnp.float32), signs, g)  # (k, o)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def lutgemm_tablewise_ref(
+    x: np.ndarray, packed: np.ndarray, scales: np.ndarray, g: int
+) -> np.ndarray:
+    """Slow numpy emulation of the *actual LUT algorithm* (paper §III.B, Table II).
+
+    Builds the 2^mu-entry table per mu-length activation sub-vector, retrieves
+    partial sums by packed-byte key, applies group scales, accumulates. Used to
+    unit-test that the LUT formulation computes the same function as the dense
+    reconstruction (it is exact, up to fp associativity).
+    """
+    mu = packing.MU
+    q, kc, o = packed.shape
+    k = kc * mu
+    b = x.shape[0]
+    x = np.asarray(x, dtype=np.float64)
+    scales = np.asarray(scales, dtype=np.float64)
+
+    # all 2^mu sign patterns, LSB-first — pattern[key, j] = +1 if bit j of key set
+    keys = np.arange(1 << mu)
+    patterns = 2.0 * ((keys[:, None] >> np.arange(mu)[None, :]) & 1) - 1.0  # (256, mu)
+
+    # LUT[b, c, key] = sum_j patterns[key, j] * x[b, mu*c + j]
+    x_chunks = x.reshape(b, kc, mu)
+    lut = np.einsum("pj,bcj->bcp", patterns, x_chunks)  # (b, kc, 256)
+
+    # retrieve by key, scale per group, accumulate over q and groups
+    out = np.zeros((b, o))
+    cpg = g // mu  # byte-chunks per scale group
+    for i in range(q):
+        part = np.take_along_axis(
+            lut[:, :, :, None], packed[i][None, :, None, :].astype(np.int64), axis=2
+        )[:, :, 0, :]  # (b, kc, o)
+        grouped = part.reshape(b, kc // cpg, cpg, o).sum(axis=2)  # (b, G, o)
+        out += np.einsum("bGo,Go->bo", grouped, scales[i])
+    return out

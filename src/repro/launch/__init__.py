@@ -1,0 +1,1 @@
+"""Launch entry points: mesh construction, multi-pod dry-run, train, serve."""

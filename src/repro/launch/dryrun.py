@@ -1,0 +1,446 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input-shape × mesh) cell:
+``jax.jit(step, in_shardings, out_shardings).lower(*structs).compile()`` on the
+production mesh built from 512 host placeholder devices, then record
+``memory_analysis()`` / ``cost_analysis()`` / HLO collective bytes for the
+roofline (deliverable g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>__<quant>.json and
+existing cells are skipped (resumable sweep).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import collective_bytes, total_collective_bytes
+from repro.analysis.hlo_cost import analyze as hlo_analyze
+from repro.analysis.roofline import model_flops_estimate, roofline
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh, production_axes
+from repro.models import init_cache, init_params
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.parallel import batch_specs, cache_specs, param_specs
+from repro.parallel.sharding import MeshAxes, logits_spec, qt_specs_like
+from repro.quant import QuantPolicy, quantized_structs
+from repro.train.optimizer import adamw_init
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+from repro.core.qtensor import QuantizedTensor
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out = {}
+    if cfg.input_kind == "tokens":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        out["embeddings"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "vlm":
+        out["image_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def param_structs(cfg: ModelConfig, quant: Optional[QuantPolicy]):
+    structs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if quant is not None:
+        structs = quantized_structs(structs, quant)
+    return structs
+
+
+def _spec_tree_for(structs, dense_specs, ax: MeshAxes):
+    """Match the (possibly quantized) struct tree with PartitionSpecs."""
+
+    def visit(struct, spec):
+        if isinstance(struct, QuantizedTensor):
+            return qt_specs_like(spec, struct, ax)
+        return spec
+
+    return jax.tree.map(
+        visit,
+        structs,
+        dense_specs,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor),
+    )
+
+
+def input_specs(
+    arch: str, shape: str, quant_q: int = 0, dp_size: int = 16, kv_quant: bool = False
+):
+    """→ (step_fn, arg_structs, in_specs, out_specs, meta) for one cell.
+
+    ``quant_q``: 0 = dense bf16; 2/4 = group-wise BCQ with g=128 on serve paths
+    (paper Fig. 13: prefill dequantizes, decode consumes packed — on TPU via
+    the Pallas kernels, in this CPU lowering via the jnp reference path).
+    """
+    cfg = get_config(arch)
+    if kv_quant:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, kv_cache_dtype="int8", stages=None)
+    sc: ShapeConfig = SHAPES[shape]
+    if sc.name == "long_500k" and not cfg.supports_long_context:
+        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped (DESIGN.md §4)")
+
+    policy = QuantPolicy(q=quant_q, g=128) if quant_q else None
+    p_structs = param_structs(cfg, policy)
+
+    if sc.kind == "train":
+        accum = max(1, min(16, sc.global_batch // dp_size))
+        while sc.global_batch % accum or (sc.global_batch // accum) % dp_size:
+            accum -= 1
+        step = make_train_step(cfg, remat=True, accum_steps=accum)
+        opt_structs = jax.eval_shape(adamw_init, p_structs)
+        b_structs = batch_structs(cfg, sc.global_batch, sc.seq_len)
+        args = (p_structs, opt_structs, b_structs)
+
+        def spec_fn(ax):
+            from jax.sharding import PartitionSpec as P
+            from repro.train.optimizer import AdamWState
+
+            ps = param_specs(cfg, ax)
+            opt_specs = AdamWState(step=P(), m=ps, v=jax.tree.map(lambda x: x, ps))
+            bs = batch_specs(cfg, ax, sc.global_batch)
+            metrics_specs = {"loss": P(), "moe_aux": P(), "grad_norm": P()}
+            return (ps, opt_specs, bs), (ps, opt_specs, metrics_specs)
+
+        tokens = sc.global_batch * sc.seq_len
+        training = True
+    elif sc.kind == "prefill":
+        step = make_prefill_step(cfg)
+        # serving: no FSDP on weights — DP replicas hold full TP-sharded
+        # weights (BCQ makes them small; re-gathering them every step over
+        # `data` is pure overhead)
+        b_structs = batch_structs(cfg, sc.global_batch, sc.seq_len)
+        b_structs.pop("labels")
+        cache_structs = jax.eval_shape(
+            lambda: init_cache(cfg, sc.global_batch, sc.seq_len)
+        )
+        args = (p_structs, b_structs, cache_structs)
+
+        def spec_fn(ax):
+            import dataclasses as _dc
+
+            ps = param_specs(cfg, _dc.replace(ax, fsdp=None))
+            bs = batch_specs(cfg, ax, sc.global_batch)
+            bs.pop("labels")
+            cs = cache_specs(cfg, ax, sc.global_batch)
+            return (ps, bs, cs), (logits_spec(cfg, ax, sc.global_batch), cs)
+
+        tokens = sc.global_batch * sc.seq_len
+        training = False
+    else:  # decode
+        step = make_serve_step(cfg)
+        b_structs = batch_structs(cfg, sc.global_batch, 1)
+        b_structs.pop("labels")
+        cache_structs = jax.eval_shape(
+            lambda: init_cache(cfg, sc.global_batch, sc.seq_len)
+        )
+        pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_structs, cache_structs, b_structs, pos_struct)
+
+        def spec_fn(ax):
+            import dataclasses as _dc
+
+            from jax.sharding import PartitionSpec as P
+
+            ps = param_specs(cfg, _dc.replace(ax, fsdp=None))
+            bs = batch_specs(cfg, ax, sc.global_batch)
+            bs.pop("labels")
+            cs = cache_specs(cfg, ax, sc.global_batch)
+            return (ps, cs, bs, P()), (logits_spec(cfg, ax, sc.global_batch), cs)
+
+        tokens = sc.global_batch
+        training = False
+
+    counts = count_params(cfg, p_structs)
+    meta = {
+        "arch": arch,
+        "shape": shape,
+        "kind": sc.kind,
+        "tokens_per_step": tokens,
+        "training": training,
+        "quant_q": quant_q,
+        "accum_steps": locals().get("accum", 1),
+        "params_total": counts["total"],
+        "params_active": counts["active_nonembed"],
+        "embed_params": counts["embed"],
+    }
+    return step, args, spec_fn, p_structs, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+def count_params(cfg: ModelConfig, p_structs) -> dict:
+    """Exact logical param counts from the struct tree (QT leaves count their
+    dense k·o size). active = total with MoE experts scaled by top_k/E."""
+    import numpy as np
+
+    total = active = embed = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        p_structs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    for path, leaf in flat:
+        keys = [getattr(pp, "key", getattr(pp, "name", str(pp))) for pp in path]
+        if isinstance(leaf, QuantizedTensor):
+            lead = (
+                int(np.prod(leaf.packed.shape[:-3])) if leaf.packed.ndim > 3 else 1
+            )
+            n = lead * leaf.k * leaf.o
+        else:
+            n = int(np.prod(leaf.shape))
+        total += n
+        if keys and keys[0] == "embed":
+            embed += n
+            continue
+        is_expert = (
+            cfg.n_experts > 0
+            and "mlp" in keys
+            and keys[-1] in ("w_gate", "w_up", "w_down")
+            and "shared" not in keys
+        )
+        if is_expert:
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+    return {"total": total, "active_nonembed": active, "embed": embed}
+
+
+# ---------------------------------------------------------------------------
+# HBM adjustment for the fused BCQ kernel (see DESIGN.md §2 / EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+
+def bcq_hbm_adjustment(p_structs) -> int:
+    """Bytes the TPU Pallas kernel does NOT move, but the CPU-lowered jnp
+    reference does: the dequantised f32 weight round-trip (write+read, 8·k·o)
+    and the unpacked int8 signs round-trip (2·q·k·o) per quantized matmul use.
+    """
+    adj = 0
+    for leaf in jax.tree.leaves(
+        p_structs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ):
+        if isinstance(leaf, QuantizedTensor):
+            import numpy as np
+
+            lead = int(np.prod(leaf.packed.shape[:-3])) if leaf.packed.ndim > 3 else 1
+            q = leaf.packed.shape[-3]
+            ko = leaf.k * leaf.o
+            adj += lead * (8 * ko + 2 * q * ko)
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str, shape: str, mesh_kind: str, quant_q: int = 0, verbose: bool = True,
+    kv_quant: bool = False,
+) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    ax = production_axes(multi_pod=multi)
+    chips = mesh.devices.size
+
+    step, args, spec_fn, p_structs, meta = input_specs(
+        arch, shape, quant_q, dp_size=ax.data_size, kv_quant=kv_quant
+    )
+    in_specs, out_specs = spec_fn(ax)
+    # expand dense weight specs into QuantizedTensor-structured specs
+    in_specs = _spec_tree_for(args, in_specs, ax)
+    in_shardings = jax.tree.map(
+        lambda s: jax.NamedSharding(mesh, s),
+        in_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    out_shardings = jax.tree.map(
+        lambda s: jax.NamedSharding(mesh, s),
+        out_specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+    # donate the state that flows through: params/opt (train), cache (serve) —
+    # removes whole-buffer copies at the step boundary (in-place production
+    # semantics; without this every decode step would copy the full KV cache)
+    donate = {"train": (0, 1), "prefill": (2,), "decode": (1,)}[meta["kind"]]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            step,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            donate_argnums=donate,
+        ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)  # raw single-pass HLO sweep (reference)
+    tc = hlo_analyze(hlo)  # trip-count-aware custom cost model (the roofline)
+
+    if verbose:
+        print(f"--- {arch} × {shape} × {mesh_kind} (q={quant_q or 'dense'}) ---")
+        print("memory_analysis:", mem)
+        print(
+            "cost_analysis flops:", cost.get("flops"),
+            "bytes:", cost.get("bytes accessed"),
+            "| trip-aware flops:", tc.flops, "bytes:", tc.bytes,
+        )
+
+    flops_pc = tc.flops
+    bytes_pc = tc.bytes
+    coll_total = tc.collective_bytes
+    coll_wire = tc.collective_wire_bytes
+
+    n_active = meta["params_active"]
+    mf = model_flops_estimate(n_active, meta["tokens_per_step"], meta["training"])
+
+    adj = bcq_hbm_adjustment(p_structs) if quant_q else 0
+    rf = roofline(flops_pc, bytes_pc, coll_wire, chips=chips, model_flops=mf)
+    rf_adj = roofline(
+        flops_pc, max(bytes_pc - adj, 0.0), coll_wire, chips=chips, model_flops=mf
+    )
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "chips": int(chips),
+        "quant_q": quant_q,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory_analysis": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis_builtin": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "trip_aware": {
+            "flops": tc.flops,
+            "bytes": tc.bytes,
+            "collectives": tc.coll,
+            "unparsed_loops": tc.unparsed_loops,
+        },
+        "collectives": coll,
+        "collective_bytes": coll_total,
+        "collective_wire_bytes": coll_wire,
+        "model_flops": mf,
+        "bcq_hbm_adjustment": adj,
+        "roofline": rf.to_dict(),
+        "roofline_kernel_adjusted": rf_adj.to_dict(),
+        "meta": meta,
+    }
+    return result
+
+
+def cell_list(mesh_kinds):
+    """Assigned cells: train=bf16, serve=q4 (the system as the paper intends).
+    Single-pod serve cells also get dense + q2 variants — the paper-comparison
+    baselines the roofline report pairs against."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape, sc in SHAPES.items():
+            if shape == "long_500k" and not cfg.supports_long_context:
+                continue
+            for mesh_kind in mesh_kinds:
+                if sc.kind == "train":
+                    cells.append((arch, shape, mesh_kind, 0))
+                    continue
+                quants = (4,) if mesh_kind == "multi" else (4, 2, 0)
+                for q in quants:
+                    cells.append((arch, shape, mesh_kind, q))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--quant", type=int, default=None, help="BCQ q bits (0=dense)")
+    ap.add_argument("--kv-quant", action="store_true", help="int8 KV cache")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    mesh_kinds = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = cell_list(mesh_kinds)
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        q = args.quant
+        if q is None:
+            q = 0 if SHAPES[args.shape].kind == "train" else 4
+        cells = [(args.arch, args.shape, mk, q) for mk in mesh_kinds]
+    kvq = getattr(args, "kv_quant", False)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mesh_kind, q in cells:
+        suffix = "__kvq8" if kvq else ""
+        name = f"{arch}__{shape}__{mesh_kind}__q{q}{suffix}.json"
+        path = os.path.join(args.out_dir, name)
+        if os.path.exists(path) and not args.force:
+            n_skip += 1
+            continue
+        try:
+            res = run_cell(arch, shape, mesh_kind, q, kv_quant=kvq)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            n_ok += 1
+            r = res["roofline"]
+            print(
+                f"OK  {name}: dominant={r['dominant']} bound={r['bound_s']*1e3:.2f}ms "
+                f"compile={res['compile_s']:.1f}s"
+            )
+        except SkipCell as e:
+            print(f"SKIP {name}: {e}")
+            n_skip += 1
+        except Exception:
+            print(f"FAIL {name}:")
+            traceback.print_exc()
+            n_fail += 1
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Training launcher: the production loop on any assigned arch.
+
+On real hardware this runs the full-size config under the production mesh; on
+this CPU container it runs the reduced same-family config so the entire stack
+(data → scan/remat step → checkpoint/resume → preemption) is exercised end to
+end.
+
+PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import MarkovCorpus, batch_iterator
+from repro.models import init_params, reduced
+from repro.train import adamw_init, make_train_step
+from repro.train.loop import LoopConfig, PreemptionGuard, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the published config (needs a real pod)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_size else reduced(get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, lr=args.lr, accum_steps=args.accum))
+    corpus = MarkovCorpus(cfg.vocab, seed=0)
+    emb = cfg.d_model if cfg.input_kind == "embeddings" else None
+    batches = (
+        {k: jnp.asarray(v) for k, v in b.items()}
+        for b in batch_iterator(corpus, batch=args.batch, seq_len=args.seq,
+                                embed_dim=emb)
+    )
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=max(args.steps // 4, 1), log_every=10)
+    train_loop(step, params, opt, batches, loop_cfg, guard=PreemptionGuard())
+
+
+if __name__ == "__main__":
+    main()

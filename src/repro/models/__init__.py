@@ -1,0 +1,14 @@
+"""Decoder-model zoo: dense GQA / MoE / VLM / audio / RG-LRU hybrid / xLSTM."""
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig, reduced
+from repro.models.model import forward, init_cache, init_params
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "forward",
+    "init_cache",
+    "init_params",
+    "reduced",
+]

@@ -1,0 +1,229 @@
+"""Model configuration for the decoder zoo.
+
+A model is a stack of *stages*; each stage is a (pattern, repeat) pair where
+``pattern`` is a tuple of block types executed in order and ``repeat`` is how
+many times the pattern repeats (params stacked on a leading axis, applied with
+``lax.scan``). This expresses every assigned architecture:
+
+  dense       [("attn",) x L]
+  moe         [("attn_moe",) x L]
+  vlm         [("attn","attn","attn","attn","cross") x L/5]
+  audio       [("attn",) x L]                      (frame-embedding inputs)
+  hybrid      [("rglru","rglru","local_attn") x 12, ("rglru","rglru") x 1]
+  ssm         [("mlstm","slstm") x L/2]
+
+Block types: attn | attn_moe | local_attn | cross | rglru | mlstm | slstm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Stage = Tuple[Tuple[str, ...], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None  # default d_model // n_heads
+    stages: Optional[Tuple[Stage, ...]] = None  # derived if None
+
+    # attention
+    rope_theta: float = 500_000.0
+    window: int = 2048  # local attention window (hybrid family)
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False  # llama4-style always-on expert
+    moe_d_ff: Optional[int] = None  # per-expert hidden (defaults to d_ff)
+    moe_period: int = 1  # every Nth layer is MoE (llama4 interleaves dense/MoE)
+
+    # VLM
+    cross_attn_period: int = 5  # every Nth layer is cross-attention
+    n_image_tokens: int = 1601  # stub vision tower output length
+
+    # hybrid (RG-LRU)
+    lru_width: Optional[int] = None  # defaults to d_model
+    conv_width: int = 4
+
+    # ssm (xLSTM)
+    mlstm_proj_factor: float = 2.0
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"  # "int8": quantized KV cache (beyond-paper)
+    norm_eps: float = 1e-6
+
+    # inputs: "tokens" or "embeddings" (modality-stub archs)
+    input_kind: str = "tokens"
+
+    def __post_init__(self):
+        if self.d_head is None:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.lru_width is None:
+            object.__setattr__(self, "lru_width", self.d_model)
+        if self.moe_d_ff is None and self.n_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.stages is None:
+            object.__setattr__(self, "stages", self._derive_stages())
+
+    def _derive_stages(self) -> Tuple[Stage, ...]:
+        L = self.n_layers
+        if self.family in ("dense", "audio"):
+            return ((("attn",), L),)
+        if self.family == "moe":
+            if self.moe_period > 1:
+                p = self.moe_period
+                if L % p:
+                    raise ValueError(f"moe layers {L} must divide by period {p}")
+                return ((("attn",) * (p - 1) + ("attn_moe",), L // p),)
+            return ((("attn_moe",), L),)
+        if self.family == "vlm":
+            p = self.cross_attn_period
+            if L % p:
+                raise ValueError(f"vlm layers {L} must divide by period {p}")
+            return ((("attn",) * (p - 1) + ("cross",), L // p),)
+        if self.family == "hybrid":
+            # Griffin 1:2 — repeat (rglru, rglru, local_attn); remainder rglru
+            full, rem = divmod(L, 3)
+            stages: list[Stage] = [(("rglru", "rglru", "local_attn"), full)]
+            if rem:
+                stages.append((("rglru",) * rem, 1))
+            return tuple(stages)
+        if self.family == "ssm":
+            if L % 2:
+                raise ValueError("ssm family expects even layer count")
+            return ((("mlstm", "slstm"), L // 2),)
+        raise ValueError(f"unknown family {self.family}")
+
+    # ---- dtype helpers -------------------------------------------------
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: no full-attention block anywhere."""
+        return all(
+            b in ("rglru", "local_attn", "mlstm", "slstm")
+            for pattern, _ in self.stages
+            for b in pattern
+        )
+
+    def block_counts(self) -> dict:
+        counts: dict = {}
+        for pattern, repeat in self.stages:
+            for b in pattern:
+                counts[b] = counts.get(b, 0) + repeat
+        return counts
+
+    # ---- parameter census (for roofline MODEL_FLOPS = 6·N·D) ----------
+    def param_count(self, active_only: bool = False) -> int:
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        n = V * D  # embed
+        n += D * V  # lm head
+        n += D  # final norm
+        counts = self.block_counts()
+        attn = D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+        mlp = 3 * D * F
+        for b, c in counts.items():
+            if b in ("attn", "local_attn", "cross"):
+                n += c * (attn + mlp + 2 * D)
+                if b == "cross":
+                    n += c * 0  # kv from image embeddings, same proj sizes
+            elif b == "attn_moe":
+                Fe = self.moe_d_ff
+                e_active = self.top_k if active_only else self.n_experts
+                n += c * (attn + 2 * D + D * self.n_experts)
+                n += c * (3 * D * Fe * e_active)
+                if self.shared_expert:
+                    n += c * 3 * D * F
+            elif b == "rglru":
+                W = self.lru_width
+                n += c * (2 * D * W + self.conv_width * W + 2 * W * W + W + W * D)
+                n += c * (mlp + 2 * D)
+            elif b == "mlstm":
+                inner = int(self.d_model * self.mlstm_proj_factor)
+                n += c * (2 * D * inner + 3 * inner * inner + 2 * inner * 4 + inner * D + D)
+            elif b == "slstm":
+                nh = self.n_heads
+                dh = D // nh
+                n += c * (4 * D * D + 4 * nh * dh * dh + D * D + D)
+        return int(n)
+
+
+# ---------------------------------------------------------------------------
+# Input shape sets (assigned): every LM shape is (seq_len, global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        name=cfg.name + "-smoke",
+        family=cfg.family,
+        n_layers={"vlm": cfg.cross_attn_period, "hybrid": 5, "ssm": 2}.get(
+            cfg.family, 2
+        ),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        rope_theta=cfg.rope_theta,
+        window=16,
+        n_experts=min(cfg.n_experts, 8),
+        top_k=min(cfg.top_k, 2),
+        shared_expert=cfg.shared_expert,
+        moe_d_ff=64 if cfg.n_experts else None,
+        cross_attn_period=cfg.cross_attn_period,
+        n_image_tokens=8,
+        lru_width=64,
+        input_kind=cfg.input_kind,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

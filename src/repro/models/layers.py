@@ -1,0 +1,374 @@
+"""Transformer building blocks (pure JAX, pytree params).
+
+Every weight application goes through :func:`repro.kernels.ops.linear`, so any
+leaf may be a dense array *or* a packed BCQ :class:`QuantizedTensor` — the
+paper's technique is a per-layer switch, not a separate model.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import linear
+from repro.models.config import ModelConfig
+from repro.parallel.ctx import constrain_decode_q, constrain_qkv
+
+Array = jax.Array
+NEG_INF = jnp.finfo(jnp.float32).min
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, k: int, o: int, dtype) -> Array:
+    scale = 1.0 / jnp.sqrt(k)
+    return (jax.random.normal(key, (k, o), jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], cfg.d_model, cfg.q_dim, cfg.pdtype),
+        "wk": _dense_init(ks[1], cfg.d_model, cfg.kv_dim, cfg.pdtype),
+        "wv": _dense_init(ks[2], cfg.d_model, cfg.kv_dim, cfg.pdtype),
+        "wo": _dense_init(ks[3], cfg.q_dim, cfg.d_model, cfg.pdtype),
+    }
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], cfg.d_model, d_ff, cfg.pdtype),
+        "w_up": _dense_init(ks[1], cfg.d_model, d_ff, cfg.pdtype),
+        "w_down": _dense_init(ks[2], d_ff, cfg.d_model, cfg.pdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (B, S, H, Dh); positions: (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(kv: Array, n_rep: int) -> Array:
+    """(B, S, Hkv, Dh) → (B, S, Hkv*n_rep, Dh) for GQA."""
+    if n_rep == 1:
+        return kv
+    b, s, h, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """GQA-native softmax attention. q: (B,Sq,H,Dh); k,v: (B,Sk,Hkv,Dh) with
+    H = G·Hkv; mask broadcastable to (..,Sq,Sk) or None.
+
+    - No K/V head replication is ever materialised: queries are grouped
+      (B,Sq,Hkv,G,Dh) and contracted against the raw Hkv heads (the repeated
+      broadcast cost 64 GB/step on decode_32k before this).
+    - Inputs stay in their native (bf16) dtype; accumulation is f32 via
+      preferred_element_type — no materialised f32 Q/K/V copies.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(dh))
+    if mask is not None:
+        logits = jnp.where(mask[..., None, :, :] if mask.ndim == 4 else mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _local_attention_chunked(q: Array, k: Array, v: Array, window: int) -> Array:
+    """Exact sliding-window causal attention in O(S·window).
+
+    Standard chunking: split the sequence into window-sized chunks; each chunk
+    attends to itself + the previous chunk under a banded causal mask.
+    q, k, v: (B, S, H, Dh) with S % window == 0 (callers pad).
+    """
+    b, s, h, dh = q.shape
+    w = window
+    if s <= w:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = (ki <= qi) & (ki > qi - w)
+        return _sdpa(q, k, v, mask[None, None])
+    if s % w:
+        # pad at the end; padded keys are "future" for every real query → masked
+        pad = w - s % w
+        padded = [jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v)]
+        return _local_attention_chunked(*padded, window)[:, :s]
+    nc = s // w
+    hkv = k.shape[2]
+    g = h // hkv
+    qc = q.reshape(b, nc, w, hkv, g, dh)
+    kc = k.reshape(b, nc, w, hkv, dh)
+    vc = v.reshape(b, nc, w, hkv, dh)
+    # previous chunk (zeros before chunk 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([kprev, kc], axis=2)  # (b, nc, 2w, hkv, dh)
+    vv = jnp.concatenate([vprev, vc], axis=2)
+    qi = jnp.arange(w)[:, None] + w  # query abs pos within the 2w key window
+    ki = jnp.arange(2 * w)[None, :]
+    mask = (ki <= qi) & (ki > qi - w)  # (w, 2w)
+    first = jnp.arange(nc) == 0
+    # chunk 0 must not see the zero-padded "previous" keys
+    mask_c = mask[None] & ~(first[:, None, None] & (ki < w)[None])  # (nc, w, 2w)
+    logits = jnp.einsum(
+        "bnqhgd,bnkhd->bnhgqk", qc, kk, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.where(mask_c[None, :, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bnhgqk,bnkhd->bnqhgd", probs.astype(vv.dtype), vv,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+Q_CHUNK = 2048  # query-block length for long-sequence causal attention
+
+
+def _sdpa_qchunked(q: Array, k: Array, v: Array, chunk: int = Q_CHUNK) -> Array:
+    """Causal attention scanned over query blocks: O(chunk·S) live logits.
+
+    Full-S² logits at 32k seq are ~34 GB/device f32 — this bounds them to one
+    (B, H, chunk, S) block at a time. Pure-XLA fallback for the TPU flash
+    kernel; attention FLOPs remain full-S² masked (2× the causal-useful work —
+    noted in the roofline methodology).
+    """
+    b, s, h, dh = q.shape
+    if s % chunk:
+        return _sdpa(q, k, v, causal_mask(s, s))
+    nc = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, dh), 1, 0)  # (nc, b, chunk, h, dh)
+
+    kpos = jnp.arange(s)
+
+    def body(_, inp):
+        qblk, i = inp
+        qpos = i * chunk + jnp.arange(chunk)
+        mask = (kpos[None, :] <= qpos[:, None])[None, None]  # (1,1,chunk,s)
+        out = _sdpa(qblk, k, v, mask)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+
+
+LONG_SEQ_THRESHOLD = 8192
+
+
+def causal_mask(sq: int, sk: int, window: int = 0) -> Array:
+    """(1,1,sq,sk) boolean; window>0 restricts to a local band."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# attention block (self / local / cross)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    *,
+    cache: Optional[dict] = None,
+    pos: Optional[Array] = None,
+    window: int = 0,
+    kv_override: Optional[Tuple[Array, Array]] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """GQA attention. Returns (out, new_cache).
+
+    Modes
+    -----
+    train            cache=None                 full / chunked-local causal attn
+    prefill          cache=empty, pos=0         as train, but also fills the cache
+    decode           cache=filled, pos=cur_len  x is (B, 1, D), attends cache
+    cross            kv_override=(k_mem, v_mem) attends provided memory, no cache
+    """
+    b, s, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+
+    if kv_override is not None:
+        k_mem, v_mem = kv_override
+        out = _sdpa(q, k_mem, v_mem, None)
+        return linear(out.reshape(b, s, cfg.q_dim), p["wo"]), cache
+
+    k = linear(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = linear(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    k = rope(k, positions, cfg.rope_theta)
+
+    def _causal(qq, kk, vv):
+        qq, kk, vv = constrain_qkv(qq, kk, vv)
+        if s >= LONG_SEQ_THRESHOLD:
+            return _sdpa_qchunked(qq, kk, vv)
+        return _sdpa(qq, kk, vv, causal_mask(s, s))
+
+    new_cache = None
+    if cache is None:
+        # train: no cache
+        if window:
+            out = _local_attention_chunked(q, k, v, window)
+        else:
+            out = _causal(q, k, v)
+    elif s > 1:
+        # prefill: compute attention over the fresh sequence, then write cache
+        if window:
+            out = _local_attention_chunked(q, k, v, window)
+        else:
+            out = _causal(q, k, v)
+        new_cache = _cache_write(cache, k, v, pos, window)
+    else:
+        # decode: single new token against the cache. The cache is Dh-sharded
+        # on `model`; constrain q to match so the score einsum is a local
+        # partial followed by a tiny all-reduce of (B,1,D) partials — NOT a
+        # whole-cache all-gather (was 64 GB/step).
+        new_cache = _cache_write(cache, k, v, pos, window)
+        ck, cv = new_cache["k"], new_cache["v"]
+        if "k_scale" in new_cache:
+            ck = _kv_dequantize(ck, new_cache["k_scale"], x.dtype)
+            cv = _kv_dequantize(cv, new_cache["v_scale"], x.dtype)
+        q = constrain_decode_q(q)
+        s_max = ck.shape[1]
+        slot = jnp.arange(s_max)
+        if window:
+            stored = _ring_positions(slot, pos + 1, s_max)
+            valid = (stored >= 0) & (stored <= pos) & (stored > pos - window)
+        else:
+            valid = slot <= pos
+        out = _sdpa(q, ck, cv, valid[None, None, None, :])
+    out = linear(out.reshape(b, s, cfg.q_dim), p["wo"])
+    return out, new_cache
+
+
+def _kv_quantize(x: Array):
+    """(B, s, Hkv, Dh) → int8 codes + per-(token, head) scale (beyond-paper
+    int8 KV cache; vLLM-style dynamic per-vector scaling)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B, s, Hkv)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None] * 127.0),
+        -127, 127,
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequantize(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * (scale[..., None] / 127.0)).astype(dtype)
+
+
+def _cache_write(cache: dict, k: Array, v: Array, pos: Array, window: int) -> dict:
+    """Write s new K/V rows at absolute position `pos` (ring buffer if local).
+
+    Scalar-start ``dynamic_update_slice`` wherever possible: gather-index
+    scatters lower to whole-cache select/convert chains (measured 24 GB/step of
+    cache round-trips on llama3.2-3b decode_32k — §Perf cell A). A cache-as-
+    scan-carry variant with 5-D DUS was tried and REJECTED: XLA's copy
+    insertion duplicates the whole carry whenever the loop body also READS a
+    slice of it (measured 105 GB/step vs 15 GB for the xs/ys form).
+    """
+    ck, cv = cache["k"], cache["v"]
+    s_max = ck.shape[1]
+    s = k.shape[1]
+    quantized = "k_scale" in cache
+    if quantized:
+        k, k_scale = _kv_quantize(k)
+        v, v_scale = _kv_quantize(v)
+
+    def dus(buf, new, start, rank4=True):
+        new = new.astype(buf.dtype)
+        st = start.astype(jnp.int32) if hasattr(start, "astype") else jnp.int32(start)
+        zero = jnp.int32(0)
+        idxs = (zero, st, zero, zero) if rank4 else (zero, st, zero)
+        return jax.lax.dynamic_update_slice(buf, new, idxs)
+
+    def write(start):
+        out = {"k": dus(ck, k, start), "v": dus(cv, v, start)}
+        if quantized:
+            out["k_scale"] = dus(cache["k_scale"], k_scale, start, rank4=False)
+            out["v_scale"] = dus(cache["v_scale"], v_scale, start, rank4=False)
+        return out
+
+    if s >= s_max:
+        # keep only the last s_max tokens (local-attn prefill over a window)
+        keep = slice(s - s_max, None)
+        k, v = k[:, keep], v[:, keep]
+        if quantized:
+            k_scale, v_scale = k_scale[:, keep], v_scale[:, keep]
+        if window:
+            # ring phase: slot = abs_pos % s_max → roll the linear order
+            base = (pos + s - s_max) % s_max
+            k = jnp.roll(k, base, axis=1)
+            v = jnp.roll(v, base, axis=1)
+            if quantized:
+                k_scale = jnp.roll(k_scale, base, axis=1)
+                v_scale = jnp.roll(v_scale, base, axis=1)
+        return write(jnp.int32(0))
+    if window and s > 1:
+        # partial ring fill that may wrap — not used by any assigned shape
+        idx = (pos + jnp.arange(s)) % s_max
+        out = {
+            "k": ck.at[:, idx].set(k.astype(ck.dtype)),
+            "v": cv.at[:, idx].set(v.astype(cv.dtype)),
+        }
+        if quantized:
+            out["k_scale"] = cache["k_scale"].at[:, idx].set(k_scale)
+            out["v_scale"] = cache["v_scale"].at[:, idx].set(v_scale)
+        return out
+    start = (pos % s_max) if window else pos
+    return write(start)
+
+
+def _ring_positions(slot: Array, total: Array, s_max: int) -> Array:
+    """Absolute position held by each ring slot after `total` writes."""
+    r = total % s_max
+    base = total - r
+    return jnp.where(slot < r, base + slot, base - s_max + slot)
+
+
+def mlp_swiglu(p: dict, x: Array) -> Array:
+    gate = jax.nn.silu(linear(x, p["w_gate"]))
+    up = linear(x, p["w_up"])
+    return linear(gate * up, p["w_down"])

@@ -1,0 +1,289 @@
+"""Model assembly: init / forward for every architecture family.
+
+Layers are stacked per *stage* (see ``config.py``) and applied with
+``jax.lax.scan`` so the HLO stays one-superblock-sized regardless of depth —
+essential for 100-layer dry-run compiles and for remat during training.
+
+One ``forward()`` serves train, prefill and decode:
+  train    cache=None                       → logits (B, S, V)
+  prefill  cache=init_cache(...), pos=0     → logits (B, 1, V) [last position], cache
+  decode   cache=filled, pos=cur_len        → logits (B, 1, V), cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import linear
+from repro.models import layers as L
+from repro.parallel.ctx import constrain_tokens
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+ATTN_BLOCKS = ("attn", "attn_moe", "local_attn", "cross")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, btype: str) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"ln1": jnp.ones((d,), cfg.pdtype)}
+    if btype in ATTN_BLOCKS:
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ln2"] = jnp.ones((d,), cfg.pdtype)
+        if btype == "attn_moe":
+            p["mlp"] = M.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif btype == "rglru":
+        p["mix"] = R.init_rglru(ks[0], cfg)
+        p["ln2"] = jnp.ones((d,), cfg.pdtype)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif btype == "mlstm":
+        p["mix"] = R.init_mlstm(ks[0], cfg)
+    elif btype == "slstm":
+        p["mix"] = R.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block type {btype}")
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.stages) + 3)
+    stages = []
+    for si, (pattern, repeat) in enumerate(cfg.stages):
+        bkeys = jax.random.split(keys[si], len(pattern))
+        stage_p = {}
+        for bi, btype in enumerate(pattern):
+            rkeys = jax.random.split(bkeys[bi], repeat)
+            stage_p[f"b{bi}"] = jax.vmap(
+                lambda k, bt=btype: init_block(k, cfg, bt)
+            )(rkeys)
+        stages.append(stage_p)
+    params = {
+        "stages": tuple(stages),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "lm_head": L._dense_init(keys[-1], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+    if cfg.input_kind == "tokens":
+        params["embed"] = (
+            jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+        ).astype(cfg.pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(cfg: ModelConfig, btype: str, batch: int, s_max: int, dtype):
+    hkv, dh, w = cfg.n_kv_heads, cfg.d_head, cfg.lru_width
+    nh = cfg.n_heads
+    if btype in ("attn", "attn_moe", "local_attn"):
+        s_eff = min(s_max, cfg.window) if btype == "local_attn" else s_max
+        shape = (batch, s_eff, hkv, dh)
+        if cfg.kv_cache_dtype == "int8":
+            # beyond-paper: the paper quantizes the weight stream; at batched
+            # decode shapes the KV cache dominates HBM bytes — store it int8
+            # with one dynamic scale per (token, head)
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros((batch, s_eff, hkv), jnp.float32),
+                "v_scale": jnp.zeros((batch, s_eff, hkv), jnp.float32),
+            }
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if btype == "cross":
+        shape = (batch, cfg.n_image_tokens, hkv, dh)
+        return {"k_img": jnp.zeros(shape, dtype), "v_img": jnp.zeros(shape, dtype)}
+    if btype == "rglru":
+        return {
+            "h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        }
+    if btype == "mlstm":
+        inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        dhi = inner // nh
+        return {
+            "c": jnp.zeros((batch, nh, dhi, dhi), jnp.float32),
+            "n": jnp.zeros((batch, nh, dhi), jnp.float32),
+            "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+        }
+    if btype == "slstm":
+        dhd = cfg.d_model // nh
+        z = jnp.zeros((batch, nh, dhd), jnp.float32)
+        return {"h": z, "c": z, "n": z + 1e-6, "m": z - jnp.inf}
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None) -> dict:
+    """Stacked (per-stage, per-pattern-position) decoding state."""
+    dtype = dtype or cfg.cdtype
+
+    def stacked(btype, repeat):
+        one = init_block_cache(cfg, btype, batch, s_max, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (repeat,) + x.shape), one)
+
+    stages = tuple(
+        {f"b{bi}": stacked(bt, repeat) for bi, bt in enumerate(pattern)}
+        for pattern, repeat in cfg.stages
+    )
+    return {"stages": stages}
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def apply_block(
+    p: dict,
+    cfg: ModelConfig,
+    btype: str,
+    h: Array,
+    positions: Array,
+    cache: Optional[dict],
+    pos: Optional[Array],
+    image_emb: Optional[Array],
+) -> Tuple[Array, Optional[dict], Array]:
+    """Returns (h, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if btype in ATTN_BLOCKS:
+        window = cfg.window if btype == "local_attn" else 0
+        kv_override = None
+        new_cache = cache
+        if btype == "cross":
+            if cache is not None and pos is not None and image_emb is None:
+                # decode: reuse cached projected image memory
+                kv_override = (cache["k_img"], cache["v_img"])
+            else:
+                b, n, _ = image_emb.shape
+                k_img = linear(image_emb, p["attn"]["wk"]).reshape(
+                    b, n, cfg.n_kv_heads, cfg.d_head
+                )
+                v_img = linear(image_emb, p["attn"]["wv"]).reshape(
+                    b, n, cfg.n_kv_heads, cfg.d_head
+                )
+                kv_override = (k_img, v_img)
+                if cache is not None:
+                    new_cache = {
+                        "k_img": k_img.astype(cache["k_img"].dtype),
+                        "v_img": v_img.astype(cache["v_img"].dtype),
+                    }
+            r, _ = L.attention(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], h), positions,
+                kv_override=kv_override,
+            )
+        else:
+            r, new_cache = L.attention(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], h), positions,
+                cache=cache, pos=pos, window=window,
+            )
+        h = h + r
+        x2 = L.rmsnorm(p["ln2"], h)
+        if btype == "attn_moe":
+            y, aux = M.moe_apply(p["mlp"], cfg, x2)
+            h = h + y
+        else:
+            h = h + L.mlp_swiglu(p["mlp"], x2)
+        return h, new_cache, aux
+
+    if btype == "rglru":
+        r, new_cache = R.rglru_block(p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache)
+        h = h + r
+        h = h + L.mlp_swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
+        return h, new_cache, aux
+
+    fn = {"mlstm": R.mlstm_block, "slstm": R.slstm_block}[btype]
+    r, new_cache = fn(p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache)
+    return h + r, new_cache, aux
+
+
+def _apply_stage(
+    stage_params: dict,
+    cfg: ModelConfig,
+    pattern: Tuple[str, ...],
+    h: Array,
+    positions: Array,
+    stage_cache: Optional[dict],
+    pos: Optional[Array],
+    image_emb: Optional[Array],
+    remat: bool,
+) -> Tuple[Array, Optional[dict], Array]:
+    def body(carry, xs):
+        hh, aux = carry
+        layer_p, layer_c = xs
+        new_c = {}
+        for bi, btype in enumerate(pattern):
+            c_in = None if layer_c is None else layer_c[f"b{bi}"]
+            hh, c_out, a = apply_block(
+                layer_p[f"b{bi}"], cfg, btype, hh, positions, c_in, pos, image_emb
+            )
+            aux = aux + a
+            if layer_c is not None:
+                new_c[f"b{bi}"] = c_out if c_out is not None else c_in
+        return (hh, aux), (new_c if layer_c is not None else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    (h, aux), new_cache = jax.lax.scan(
+        body, (h, jnp.float32(0.0)), (stage_params, stage_cache)
+    )
+    return h, new_cache, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    *,
+    tokens: Optional[Array] = None,
+    embeddings: Optional[Array] = None,
+    image_emb: Optional[Array] = None,
+    positions: Optional[Array] = None,
+    cache: Optional[dict] = None,
+    pos: Optional[Array] = None,
+    logits_mode: str = "all",  # "all" | "last"
+    remat: bool = False,
+) -> Tuple[Array, Optional[dict], Array]:
+    """Run the decoder. Returns (logits f32, new_cache or None, aux_loss)."""
+    if tokens is not None:
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+        b, s = tokens.shape
+    else:
+        h = embeddings.astype(cfg.cdtype)
+        b, s, _ = embeddings.shape
+    if positions is None:
+        base = jnp.zeros((b, 1), jnp.int32) if pos is None else jnp.full((b, 1), pos)
+        positions = base + jnp.arange(s)[None, :]
+
+    new_stages = []
+    aux_total = jnp.float32(0.0)
+    h = constrain_tokens(h)
+    for si, (pattern, _) in enumerate(cfg.stages):
+        sc = None if cache is None else cache["stages"][si]
+        h, nsc, aux = _apply_stage(
+            params["stages"][si], cfg, pattern, h, positions, sc, pos, image_emb, remat
+        )
+        h = constrain_tokens(h)  # re-anchor: keep batch on dp at stage edges
+        aux_total = aux_total + aux
+        new_stages.append(nsc)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    if logits_mode == "last":
+        h = h[:, -1:]
+    logits = linear(h, params["lm_head"], out_dtype=jnp.float32)
+    new_cache = None if cache is None else {"stages": tuple(new_stages)}
+    return logits, new_cache, aux_total

@@ -1,0 +1,240 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Top-k routing (OLMoE: 64e/top-8; Llama-4-Maverick: 128e/top-1 + shared expert).
+Dispatch is the production sort-and-bucket scheme (MegaBlocks/MaxText style):
+token→expert assignments are sorted by expert id, each expert processes a
+fixed-capacity contiguous buffer (grouped einsum → EP-shardable on the
+"model"/expert axis), and outputs scatter back weighted by router probabilities.
+Tokens past capacity are dropped (capacity_factor controls slack) — FLOPs equal
+active-expert FLOPs × capacity_factor, which keeps the roofline honest.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QuantizedTensor
+from repro.kernels.ops import linear
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, init_mlp, mlp_swiglu
+
+Array = jax.Array
+
+
+def _w(w, dtype):
+    """Expert weights may be packed BCQ — dequantize (register-level on TPU,
+    see kernels/bcq_mm.py; plain jnp here, in the compute dtype) before the
+    grouped einsum."""
+    return w.dequantize(dtype=dtype) if isinstance(w, QuantizedTensor) else w
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": _dense_init(ks[1], d, e * f, cfg.pdtype).reshape(d, e, f).transpose(1, 0, 2),
+        "w_up": _dense_init(ks[2], d, e * f, cfg.pdtype).reshape(d, e, f).transpose(1, 0, 2),
+        "w_down": _dense_init(ks[3], f, e * d, cfg.pdtype).reshape(f, e, d).transpose(1, 0, 2),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to sublane multiple
+
+
+def _ambient_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return None
+    return mesh
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, D) → ((B, S, D), load_balance_loss scalar).
+
+    Under an ambient mesh with a "model" axis, dispatch takes the shard_map
+    path (:func:`_moe_apply_sharded`): tokens are bucketed LOCALLY on each
+    chip for that chip's expert shard, experts compute local-only, and ONE
+    (T_local, D) psum over `model` combines the expert groups. The global
+    sort-dispatch under GSPMD materialised an (T·k, D) gather/scatter AND
+    all-reduced the full combine tensor — measured 68.7 GB/layer of collective
+    on olmoe prefill_32k (EXPERIMENTS.md §Perf, cell B).
+    """
+    mesh = _ambient_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        m = sizes["model"]
+        dp = tuple(a for a in ("pod", "data") if a in sizes)
+        n_dp = 1
+        for a in dp:
+            n_dp *= sizes[a]
+        b, s, _ = x.shape
+        if cfg.n_experts % m == 0 and b % max(n_dp, 1) == 0:
+            return _moe_apply_sharded(p, cfg, x, mesh, dp or None)
+    return _moe_apply_global(p, cfg, x)
+
+
+def _moe_apply_sharded(
+    p: dict, cfg: ModelConfig, x: Array, mesh, dp
+) -> Tuple[Array, Array]:
+    """shard_map MoE: local bucket → local expert GEMM → single psum combine.
+
+    Per-shard capacity is ``capacity_factor · T_local · k / E`` (statistically
+    equivalent to the global capacity; drops may differ at shard boundaries —
+    standard in production EP systems)."""
+    from jax.sharding import PartitionSpec as P
+
+    e = cfg.n_experts
+    ew_spec = P("model", None, None)
+
+    def body(xb, router, wg, wu, wd):
+        bl, sl, d = xb.shape
+        t = bl * sl
+        xf = xb.reshape(t, d)
+        e_loc = wg.shape[0]
+        j = jax.lax.axis_index("model")
+        lo = j * e_loc
+
+        logits = jnp.dot(
+            xf, router.astype(jnp.float32), preferred_element_type=jnp.float32
+        )  # (T_loc, E) — router is replicated and tiny
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = top_e.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t), cfg.top_k)
+        flat_p = top_p.reshape(-1)
+        # local expert id; non-local assignments → sacrificial bucket e_loc
+        le = flat_e - lo
+        local = (le >= 0) & (le < e_loc)
+        le = jnp.where(local, le, e_loc)
+        order = jnp.argsort(le, stable=True)
+        se, st, sp = le[order], flat_t[order], flat_p[order]
+
+        cap = _capacity(cfg, t)
+        counts = jnp.bincount(le, length=e_loc + 1)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(t * cfg.top_k) - starts[se]
+        keep = (rank < cap) & (se < e_loc)
+        slot = jnp.where(keep, rank, cap)
+
+        buf = jnp.zeros((e_loc + 1, cap + 1, d), xb.dtype)
+        buf = buf.at[se, slot].set(xf[st].astype(xb.dtype))[:e_loc, :cap]
+
+        gate = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", buf, wg, preferred_element_type=jnp.float32)
+        )
+        up = jnp.einsum("ecd,edf->ecf", buf, wu, preferred_element_type=jnp.float32)
+        out_buf = jnp.einsum(
+            "ecf,efd->ecd", (gate * up).astype(xb.dtype), wd,
+            preferred_element_type=jnp.float32,
+        )
+
+        contrib = out_buf[
+            jnp.minimum(se, e_loc - 1), jnp.minimum(slot, cap - 1)
+        ] * (sp * keep)[:, None]
+        partial = jnp.zeros((t, d), jnp.float32).at[st].add(contrib)
+        out = jax.lax.psum(partial, "model")  # combine expert groups — ONE psum
+
+        aux = load_balance_loss(logits, top_e, e)
+        aux = jax.lax.pmean(aux, "model")
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return out.reshape(bl, sl, d).astype(xb.dtype), aux
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),  # x: batch over dp, replicated over model
+            P(None, None),  # router replicated
+            ew_spec, ew_spec, ew_spec,  # experts over model (EP)
+        ),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(
+        x, p["router"],
+        _w(p["w_gate"], x.dtype), _w(p["w_up"], x.dtype), _w(p["w_down"], x.dtype),
+    )
+
+    if cfg.shared_expert:
+        out = out + mlp_swiglu(p["shared"], x)
+    return out, aux
+
+
+def _moe_apply_global(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
+    """Reference global sort-dispatch (single-device / no-mesh fallback)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, t)
+
+    router_logits = linear(xf, p["router"], out_dtype=jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renormalise
+
+    # flatten assignments and sort by expert id
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t), k)  # token index per assignment
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+
+    # rank within expert group → capacity slot; drop overflow
+    counts = jnp.bincount(flat_e, length=e)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)  # overflow lands in a sacrificial slot
+
+    # scatter tokens into per-expert buffers (E, C+1, D); slice off overflow slot
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[se, slot].set(xf[st].astype(x.dtype))[:, :cap]
+
+    # grouped expert SwiGLU (EP: expert axis shards on "model"); bf16 inputs,
+    # f32 accumulation via preferred_element_type (no f32 weight copies)
+    wg = _w(p["w_gate"], x.dtype).astype(x.dtype)
+    wu = _w(p["w_up"], x.dtype).astype(x.dtype)
+    wd = _w(p["w_down"], x.dtype).astype(x.dtype)
+    gate = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, wg, preferred_element_type=jnp.float32)
+    )
+    up = jnp.einsum("ecd,edf->ecf", buf, wu, preferred_element_type=jnp.float32)
+    out_buf = jnp.einsum(
+        "ecf,efd->ecd", (gate * up).astype(x.dtype), wd,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+    # gather back, weight by router prob, combine over k assignments
+    contrib = out_buf[se, jnp.minimum(slot, cap - 1)] * (sp * keep)[:, None].astype(
+        x.dtype
+    )  # (T*K, D); dropped assignments are zero-weighted
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+
+    if cfg.shared_expert:
+        out = out + mlp_swiglu(p["shared"], x).reshape(t, d)
+    aux = load_balance_loss(router_logits, top_e, e)
+    return out.reshape(b, s, d), aux
+
+
+def load_balance_loss(router_logits: Array, top_e: Array, n_experts: int) -> Array:
+    """Switch-style auxiliary loss (fraction·probability product)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    me = probs.mean(0)
+    one_hot = jax.nn.one_hot(top_e[:, 0], n_experts)
+    ce = one_hot.mean(0)
+    return n_experts * jnp.sum(me * ce)

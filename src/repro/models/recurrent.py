@@ -1,0 +1,366 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (Griffin/RecurrentGemma) and
+xLSTM cells (mLSTM matrix memory, sLSTM scalar memory).
+
+All three expose a *parallel* form for train/prefill (scan over time for the
+strictly-recurrent cells, quadratic gated form for mLSTM) and an O(1)-state
+*step* form for decode — which is what makes the ``long_500k`` shape lowerable
+for these families (DESIGN.md §4).
+
+References: Griffin [arXiv:2402.19427] eqs. (1)-(4); xLSTM [arXiv:2405.04517]
+§2 (sLSTM) and §3 (mLSTM), with exponential-gating log-space stabilisation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import linear
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: conv1d + RG-LRU, gated)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = sigma(L)^(c*r) starts with decay in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**_C_RGLRU, 0.999**_C_RGLRU)
+    lam = jnp.log(u ** (1.0 / _C_RGLRU) / (1 - u ** (1.0 / _C_RGLRU)))
+    return {
+        "w_x": _dense_init(ks[0], d, w, cfg.pdtype),  # recurrent branch in
+        "w_y": _dense_init(ks[1], d, w, cfg.pdtype),  # gate branch in
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32) * 0.1).astype(cfg.pdtype),
+        "w_a": _dense_init(ks[3], w, w, cfg.pdtype),  # recurrence gate
+        "w_i": _dense_init(ks[4], w, w, cfg.pdtype),  # input gate
+        "lam": lam,  # (w,) f32 learnable recurrence parameter
+        "w_out": _dense_init(ks[6], w, d, cfg.pdtype),
+    }
+
+
+def _causal_conv1d(x: Array, w: Array, state: Optional[Array]) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x: (B,S,W); w: (K,W); state: (B,K-1,W) or None."""
+    kw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, W)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None].astype(x.dtype) for i in range(kw)
+    )
+    return out, xp[:, -(kw - 1) :]
+
+
+def rglru_scan(p: dict, x: Array, h0: Optional[Array]) -> Tuple[Array, Array]:
+    """RG-LRU over a sequence. x: (B,S,W) post-conv. Returns (y, h_last).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t),
+    a_t = exp(c * r_t * log_sigmoid(Λ)), r_t = σ(x_t W_a), i_t = σ(x_t W_i).
+    """
+    b, s, w = x.shape
+    r = jax.nn.sigmoid(linear(x, p["w_a"], out_dtype=jnp.float32))
+    i = jax.nn.sigmoid(linear(x, p["w_i"], out_dtype=jnp.float32))
+    log_a = _C_RGLRU * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))[None, None]
+    a = jnp.exp(log_a)  # (B,S,W) in (0,1)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2))
+    )
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last
+
+
+def rglru_block(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    state: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """Griffin recurrent block. x: (B,S,D). state: {"h": (B,W), "conv": (B,K-1,W)}."""
+    gate = jax.nn.gelu(linear(x, p["w_y"], out_dtype=jnp.float32))
+    u = linear(x, p["w_x"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"], conv_state)
+    h0 = state["h"] if state is not None else None
+    y, h_last = rglru_scan(p, u, h0)
+    out = linear((y.astype(jnp.float32) * gate).astype(x.dtype), p["w_out"])
+    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM §3) — matrix memory, exponential gating
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    inner = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense_init(ks[0], d, inner, cfg.pdtype),
+        "w_z": _dense_init(ks[1], d, inner, cfg.pdtype),  # output-gate branch
+        "wq": _dense_init(ks[2], inner, inner, cfg.pdtype),
+        "wk": _dense_init(ks[3], inner, inner, cfg.pdtype),
+        "wv": _dense_init(ks[4], inner, inner, cfg.pdtype),
+        "w_i": _dense_init(ks[5], inner, nh, jnp.float32),  # input gate (per head)
+        "w_f": _dense_init(ks[6], inner, nh, jnp.float32),  # forget gate (per head)
+        "w_down": _dense_init(ks[7], inner, d, cfg.pdtype),
+        "skip_scale": jnp.ones((inner,), jnp.float32),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilised quadratic parallel form (train/prefill).
+
+    q,k,v: (B,NH,S,Dh); i_gate,f_gate: (B,NH,S) raw logits.
+    D_ts = exp(i_s + Σ_{u=s+1..t} log σ(f_u) − m_t), causal; h = (D ⊙ qkᵀ) v / norm.
+    """
+    b, nh, s, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)  # (B,NH,S)
+    cf = jnp.cumsum(logf, axis=-1)  # inclusive cumsum
+    # log decay matrix: cf[t] - cf[s] + i[s]  for s<=t
+    dmat = cf[..., :, None] - cf[..., None, :] + i_gate[..., None, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tri[None, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)  # stabiliser
+    dmat = jnp.exp(dmat - m)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    weights = scores * dmat
+    norm = jnp.maximum(jnp.abs(weights.sum(-1, keepdims=True)), jnp.exp(-m))
+    h = jnp.einsum("bhts,bhsd->bhtd", weights / norm, v)
+    return h
+
+
+MLSTM_CHUNK = 128  # chunkwise-parallel block length (train/prefill)
+
+
+def _mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM: O(S·chunk) memory instead of O(S²).
+
+    The quadratic form materialises a (B,NH,S,S) decay matrix — 69 TB for the
+    train_4k shape (measured 109 GB/device temp in the dry-run → would OOM a
+    v5e). Standard linear-attention chunking: intra-chunk quadratic (C×C) +
+    inter-chunk recurrent (C_state, n_state, m_state) carried by a scan, with
+    log-space stabilisation throughout. Exactly equal to the quadratic form
+    (validated in tests/test_recurrent.py).
+
+    q,k,v: (B,NH,S,Dh); i_gate,f_gate: (B,NH,S) raw logits → h (B,NH,S,Dh).
+    """
+    b, nh, s, dh = q.shape
+    c = min(chunk, s)
+    if s % c:
+        pad = c - s % c
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3))
+        out = _mlstm_chunkwise(
+            zpad(q), zpad(k), zpad(v), zpad(i_gate),
+            jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)), constant_values=30.0),  # σ≈1
+            chunk,
+        )
+        return out[:, :, :s]
+    nc = s // c
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qc = q.reshape(b, nh, nc, c, dh) * scale
+    kc = k.reshape(b, nh, nc, c, dh)
+    vc = v.reshape(b, nh, nc, c, dh)
+    ic = i_gate.reshape(b, nh, nc, c)
+    lf = jax.nn.log_sigmoid(f_gate).reshape(b, nh, nc, c)
+    bcum = jnp.cumsum(lf, axis=-1)  # within-chunk inclusive logf cumsum
+    a = ic - bcum  # a_s = i_s - b_s
+
+    # put the chunk axis first for the scan
+    qs, ks, vs, is_, bs2, as_ = (
+        jnp.moveaxis(t, 2, 0) for t in (qc, kc, vc, ic, bcum, a)
+    )
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(carry, inp):
+        c_st, n_st, m_st = carry  # (B,NH,Dh,Dh), (B,NH,Dh), (B,NH)
+        qt, kt, vt, it_, bt, at = inp
+        # stabiliser per position t: M_t = max(m_st + b_t, b_t + max_{s<=t} a_s)
+        a_run = jax.lax.cummax(at, axis=at.ndim - 1)  # (B,NH,C)
+        m_t = jnp.maximum(m_st[..., None] + bt, bt + a_run)
+        # inter-chunk: decay factor exp(b_t + m_st - M_t)
+        inter_w = jnp.exp(bt + m_st[..., None] - m_t)  # (B,NH,C)
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qt, c_st) * inter_w[..., None]
+        n_inter = jnp.einsum("bhtd,bhd->bht", qt, n_st) * inter_w
+        # intra-chunk: D_ts = exp(b_t - b_s + i_s - M_t), s<=t
+        dlog = bt[..., :, None] - bt[..., None, :] + it_[..., None, :]
+        dmat = jnp.where(tri, jnp.exp(dlog - m_t[..., :, None]), 0.0)  # (B,NH,C,C)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        w = scores * dmat
+        h_intra = jnp.einsum("bhts,bhsd->bhtd", w, vt)
+        n_intra = w.sum(-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / denom[..., None]
+        # state update to the chunk end
+        bC = bt[..., -1:]
+        m_new = jnp.maximum(m_st + bC[..., 0], (bC + a_run[..., -1:])[..., 0])
+        decay_st = jnp.exp(m_st + bC[..., 0] - m_new)  # (B,NH)
+        kw = jnp.exp(bC - bt + it_ - m_new[..., None])  # (B,NH,C)
+        c_new = decay_st[..., None, None] * c_st + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", kw, kt, vt
+        )
+        n_new = decay_st[..., None] * n_st + jnp.einsum("bhs,bhsd->bhd", kw, kt)
+        return (c_new, n_new, m_new), h
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (c0, n0, m0), (qs, ks, vs, is_, bs2, as_))
+    return jnp.moveaxis(hs, 0, 2).reshape(b, nh, s, dh)
+
+
+def mlstm_block(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    state: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """x: (B,S,D). state: {"c": (B,NH,Dh,Dh), "n": (B,NH,Dh), "m": (B,NH)}."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    inner = int(d * cfg.mlstm_proj_factor)
+    dh = inner // nh
+
+    u = linear(x, p["w_up"])
+    z = linear(x, p["w_z"], out_dtype=jnp.float32)
+    q = linear(u, p["wq"], out_dtype=jnp.float32).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    k = linear(u, p["wk"], out_dtype=jnp.float32).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    v = linear(u, p["wv"], out_dtype=jnp.float32).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    i_gate = linear(u, p["w_i"], out_dtype=jnp.float32).transpose(0, 2, 1)  # (B,NH,S)
+    f_gate = linear(u, p["w_f"], out_dtype=jnp.float32).transpose(0, 2, 1)
+
+    if state is None and s > 1:
+        if s <= MLSTM_CHUNK:
+            h = _mlstm_parallel(q, k, v, i_gate, f_gate)  # (B,NH,S,Dh)
+        else:
+            h = _mlstm_chunkwise(q, k, v, i_gate, f_gate)
+        new_state = None
+    else:
+        c = state["c"] if state is not None else jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n = state["n"] if state is not None else jnp.zeros((b, nh, dh), jnp.float32)
+        m = state["m"] if state is not None else jnp.full((b, nh), -jnp.inf, jnp.float32)
+
+        def step(carry, inp):
+            c, n, m = carry
+            q_t, k_t, v_t, i_t, f_t = inp  # (B,NH,Dh) x3, (B,NH) x2
+            logf = jax.nn.log_sigmoid(f_t)
+            m_new = jnp.maximum(logf + m, i_t)
+            fg = jnp.exp(logf + m - m_new)  # (B, NH)
+            ig = jnp.exp(i_t - m_new)  # (B, NH)
+            scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+            kv = (ig[..., None] * k_t * scale)[..., :, None] * v_t[..., None, :]
+            c = fg[..., None, None] * c + kv  # (B, NH, Dh, Dh)
+            n = fg[..., None] * n + ig[..., None] * k_t * scale
+            num = jnp.einsum("bhd,bhde->bhe", q_t, c)
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n)), jnp.exp(-m_new))
+            h_t = num / den[..., None]
+            return (c, n, m_new), h_t
+
+        seq = (
+            q.transpose(2, 0, 1, 3),
+            k.transpose(2, 0, 1, 3),
+            v.transpose(2, 0, 1, 3),
+            i_gate.transpose(2, 0, 1),
+            f_gate.transpose(2, 0, 1),
+        )
+        (c, n, m), hs = jax.lax.scan(step, (c, n, m), seq)
+        h = hs.transpose(1, 2, 0, 3)  # (B,NH,S,Dh)
+        new_state = {"c": c, "n": n, "m": m}
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    h = h + p["skip_scale"][None, None] * u.astype(jnp.float32)
+    out = linear((h * jax.nn.silu(z)).astype(x.dtype), p["w_down"])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM §2) — scalar memory with hidden-to-hidden recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 9)
+    rinit = lambda kk: (jax.random.normal(kk, (nh, dh, dh), jnp.float32) / jnp.sqrt(dh)).astype(cfg.pdtype)
+    return {
+        "w_z": _dense_init(ks[0], d, d, cfg.pdtype),
+        "w_i": _dense_init(ks[1], d, d, cfg.pdtype),
+        "w_f": _dense_init(ks[2], d, d, cfg.pdtype),
+        "w_o": _dense_init(ks[3], d, d, cfg.pdtype),
+        "r_z": rinit(ks[4]),
+        "r_i": rinit(ks[5]),
+        "r_f": rinit(ks[6]),
+        "r_o": rinit(ks[7]),
+        "w_out": _dense_init(ks[8], d, d, cfg.pdtype),
+    }
+
+
+def slstm_block(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    state: Optional[dict] = None,
+) -> Tuple[Array, Optional[dict]]:
+    """x: (B,S,D). state: {"h","c","n","m": (B,NH,Dh)}. Strictly sequential."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+
+    pre = {
+        g: linear(x, p["w_" + g], out_dtype=jnp.float32).reshape(b, s, nh, dh)
+        for g in ("z", "i", "f", "o")
+    }
+    if state is None:
+        zeros = jnp.zeros((b, nh, dh), jnp.float32)
+        st = {"h": zeros, "c": zeros, "n": zeros + 1e-6, "m": zeros - jnp.inf}
+    else:
+        st = state
+
+    r = {g: p["r_" + g].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        pz, pi, pf, po = inp  # (B,NH,Dh) each
+        rec = lambda rm: jnp.einsum("bhd,hde->bhe", h, rm)
+        z = jnp.tanh(pz + rec(r["z"]))
+        i_log = pi + rec(r["i"])
+        f_log = jax.nn.log_sigmoid(pf + rec(r["f"]))
+        o = jax.nn.sigmoid(po + rec(r["o"]))
+        m_new = jnp.maximum(f_log + m, i_log)
+        ig = jnp.exp(i_log - m_new)
+        fg = jnp.exp(f_log + m - m_new)
+        c = fg * c + ig * z
+        n = fg * n + ig
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    seq = tuple(pre[g].transpose(1, 0, 2, 3) for g in ("z", "i", "f", "o"))
+    (h, c, n, m), hs = jax.lax.scan(step, (st["h"], st["c"], st["n"], st["m"]), seq)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = linear(y, p["w_out"])
+    new_state = {"h": h, "c": c, "n": n, "m": m} if state is not None else None
+    return out, new_state

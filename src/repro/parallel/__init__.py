@@ -1,0 +1,19 @@
+"""Distribution layer: mesh axes + PartitionSpec rules (DP/FSDP/TP/EP/SP)."""
+
+from repro.parallel.sharding import (
+    MeshAxes,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    single_pod_axes,
+    multi_pod_axes,
+)
+
+__all__ = [
+    "MeshAxes",
+    "batch_specs",
+    "cache_specs",
+    "param_specs",
+    "single_pod_axes",
+    "multi_pod_axes",
+]

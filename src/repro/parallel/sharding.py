@@ -1,0 +1,318 @@
+"""PartitionSpec rules for every parameter / cache / batch tensor.
+
+Strategy (DESIGN.md §5) — everything is expressed in axis *names* so meshes of
+any size reuse the same rules:
+
+- batch (DP) over ``dp = ("pod", "data")`` (or ``("data",)`` single-pod)
+- FSDP (ZeRO-3) over ``fsdp = "data"`` — params' non-TP dim sharded in-pod,
+  replicated across pods (all-gathers stay on intra-pod ICI; only gradient
+  all-reduce crosses pods)
+- TP over ``model``: attention heads / FFN hidden / vocab / LRU width
+- EP over ``model``: MoE expert dim
+- KV caches: batch over ``dp`` (when divisible), head_dim over ``model``
+
+Spec trees mirror ``models.model.init_params`` / ``init_cache`` structurally,
+including :class:`QuantizedTensor` nodes (packed/scales get specs derived from
+the dense weight's spec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qtensor import QuantizedTensor
+from repro.models.config import ModelConfig
+
+Axis = Optional[str]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]  # batch axes (pure DP; ("pod","data") multi-pod)
+    fsdp: Optional[str]  # param-shard axis (ZeRO-3); None disables FSDP
+    model: str  # TP / EP axis
+    sizes: Tuple[Tuple[str, int], ...]  # axis name → size
+
+    def size(self, name) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            n = 1
+            for a in name:
+                n *= self.size(a)
+            return n
+        return dict(self.sizes)[name]
+
+    @property
+    def data_size(self) -> int:
+        return self.size(self.dp)
+
+    @property
+    def model_size(self) -> int:
+        return self.size(self.model)
+
+
+def single_pod_axes(data: int = 16, model: int = 16) -> MeshAxes:
+    return MeshAxes(("data",), "data", "model", (("data", data), ("model", model)))
+
+
+def multi_pod_axes(pod: int = 2, data: int = 16, model: int = 16) -> MeshAxes:
+    return MeshAxes(
+        ("pod", "data"),
+        "data",
+        "model",
+        (("pod", pod), ("data", data), ("model", model)),
+    )
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _maybe(axis, dim: int, size: int):
+    """Use `axis` only if it divides `dim` (else replicate that dim)."""
+    if axis is None:
+        return None
+    return axis if _div(dim, size) else None
+
+
+# ---------------------------------------------------------------------------
+# per-block parameter specs (mirrors models.model.init_block)
+# ---------------------------------------------------------------------------
+
+
+def _wspec(cfg: ModelConfig, ax: MeshAxes, k: int, o: int, k_ax, o_ax) -> P:
+    """Spec for a (k, o) weight; axes dropped when they don't divide."""
+    return P(_maybe(k_ax, k, ax.size(k_ax)), _maybe(o_ax, o, ax.size(o_ax)))
+
+
+def _attn_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": _wspec(cfg, ax, d, qd, f, m),
+        "wk": _wspec(cfg, ax, d, kvd, f, m),
+        "wv": _wspec(cfg, ax, d, kvd, f, m),
+        "wo": _wspec(cfg, ax, qd, d, m, f),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, ax: MeshAxes, d_ff: Optional[int] = None) -> dict:
+    f, m = ax.fsdp, ax.model
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": _wspec(cfg, ax, d, ff, f, m),
+        "w_up": _wspec(cfg, ax, d, ff, f, m),
+        "w_down": _wspec(cfg, ax, ff, d, m, f),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    em = _maybe(m, e, ax.size(m))  # EP: experts over model axis
+    df = _maybe(f, d, ax.size(f))
+    s = {
+        "router": P(df, None),
+        "w_gate": P(em, df, None),
+        "w_up": P(em, df, None),
+        "w_down": P(em, None, df),
+    }
+    if cfg.shared_expert:
+        s["shared"] = _mlp_specs(cfg, ax)
+    return s
+
+
+def _rglru_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_x": _wspec(cfg, ax, d, w, f, m),
+        "w_y": _wspec(cfg, ax, d, w, f, m),
+        "conv_w": P(None, _maybe(m, w, ax.size(m))),
+        "w_a": _wspec(cfg, ax, w, w, f, m),
+        "w_i": _wspec(cfg, ax, w, w, f, m),
+        "lam": P(_maybe(m, w, ax.size(m))),
+        "w_out": _wspec(cfg, ax, w, d, m, f),
+    }
+
+
+def _mlstm_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    d = cfg.d_model
+    inner = int(d * cfg.mlstm_proj_factor)
+    return {
+        "w_up": _wspec(cfg, ax, d, inner, f, m),
+        "w_z": _wspec(cfg, ax, d, inner, f, m),
+        "wq": _wspec(cfg, ax, inner, inner, f, m),
+        "wk": _wspec(cfg, ax, inner, inner, f, m),
+        "wv": _wspec(cfg, ax, inner, inner, f, m),
+        "w_i": P(_maybe(f, inner, ax.size(f)), None),
+        "w_f": P(_maybe(f, inner, ax.size(f)), None),
+        "w_down": _wspec(cfg, ax, inner, d, m, f),
+        "skip_scale": P(_maybe(m, inner, ax.size(m))),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    d = cfg.d_model
+    # r_* (hidden-to-hidden, per head) must be REPLICATED: sharding them puts a
+    # collective-permute inside every timestep of the sequential scan (measured:
+    # made xlstm train_4k collective-bound at 2.8 s/step — EXPERIMENTS.md §Perf).
+    rspec = P(None, None, None)
+    s = {f"w_{g}": _wspec(cfg, ax, d, d, f, m) for g in ("z", "i", "f", "o")}
+    s.update({f"r_{g}": rspec for g in ("z", "i", "f", "o")})
+    s["w_out"] = _wspec(cfg, ax, d, d, m, f)
+    return s
+
+
+def block_specs(cfg: ModelConfig, ax: MeshAxes, btype: str) -> dict:
+    s = {"ln1": P(None)}
+    if btype in ("attn", "local_attn", "cross", "attn_moe"):
+        s["attn"] = _attn_specs(cfg, ax)
+        s["ln2"] = P(None)
+        s["mlp"] = _moe_specs(cfg, ax) if btype == "attn_moe" else _mlp_specs(cfg, ax)
+    elif btype == "rglru":
+        s["mix"] = _rglru_specs(cfg, ax)
+        s["ln2"] = P(None)
+        s["mlp"] = _mlp_specs(cfg, ax)
+    elif btype == "mlstm":
+        s["mix"] = _mlstm_specs(cfg, ax)
+    elif btype == "slstm":
+        s["mix"] = _slstm_specs(cfg, ax)
+    else:
+        raise ValueError(btype)
+    return s
+
+
+def _stack(spec_tree, is_leaf=None):
+    """Prepend the scanned layer dim (replicated) to every spec."""
+    return jax.tree.map(
+        lambda p: P(None, *p), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def param_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
+    f, m = ax.fsdp, ax.model
+    stages = []
+    for pattern, _ in cfg.stages:
+        stages.append(
+            {f"b{bi}": _stack(block_specs(cfg, ax, bt)) for bi, bt in enumerate(pattern)}
+        )
+    specs = {
+        "stages": tuple(stages),
+        "final_norm": P(None),
+        "lm_head": _wspec(cfg, ax, cfg.d_model, cfg.vocab, f, m),
+    }
+    if cfg.input_kind == "tokens":
+        specs["embed"] = _wspec(cfg, ax, cfg.vocab, cfg.d_model, m, f)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# cache specs (mirrors models.model.init_cache)
+# ---------------------------------------------------------------------------
+
+
+def _cache_block_specs(cfg: ModelConfig, ax: MeshAxes, btype: str, batch: int) -> dict:
+    b_ax = ax.dp if _div(batch, ax.data_size) else None
+    m = ax.model
+    if btype in ("attn", "attn_moe", "local_attn"):
+        # NOTE: sequence-sharding the cache over `model` (flash-decoding-style
+        # split-K) was tried and REJECTED: a dynamic-position update into a
+        # sequence-sharded dim makes GSPMD reshard the whole cache every step
+        # (measured 179 GB/chip/step on llama3.2-3b decode_32k). Dh-sharding
+        # keeps writes local; the per-layer score partial-sum is the cost.
+        dh_ax = _maybe(m, cfg.d_head, ax.size(m))
+        s = P(None, b_ax, None, None, dh_ax)  # (R, B, S, Hkv, Dh)
+        if cfg.kv_cache_dtype == "int8":
+            sc = P(None, b_ax, None, None)  # (R, B, S, Hkv) scales
+            return {"k": s, "v": s, "k_scale": sc, "v_scale": sc}
+        return {"k": s, "v": s}
+    if btype == "cross":
+        dh_ax = _maybe(m, cfg.d_head, ax.size(m))
+        s = P(None, b_ax, None, None, dh_ax)
+        return {"k_img": s, "v_img": s}
+    if btype == "rglru":
+        w_ax = _maybe(m, cfg.lru_width, ax.size(m))
+        return {
+            "h": P(None, b_ax, w_ax),
+            "conv": P(None, b_ax, None, w_ax),
+        }
+    if btype == "mlstm":
+        inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        dhi_ax = _maybe(m, inner // cfg.n_heads, ax.size(m))
+        return {
+            "c": P(None, b_ax, None, dhi_ax, None),
+            "n": P(None, b_ax, None, dhi_ax),
+            "m": P(None, b_ax, None),
+        }
+    if btype == "slstm":
+        dh_s = _maybe(m, cfg.d_model // cfg.n_heads, ax.size(m))
+        s = P(None, b_ax, None, dh_s)
+        return {k: s for k in ("h", "c", "n", "m")}
+    raise ValueError(btype)
+
+
+def cache_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
+    stages = tuple(
+        {
+            f"b{bi}": _cache_block_specs(cfg, ax, bt, batch)
+            for bi, bt in enumerate(pattern)
+        }
+        for pattern, _ in cfg.stages
+    )
+    return {"stages": stages}
+
+
+# ---------------------------------------------------------------------------
+# batch / IO specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
+    """Specs for the input batch dict used by train/prefill/decode steps."""
+    b_ax = ax.dp if _div(batch, ax.data_size) else None
+    out = {}
+    if cfg.input_kind == "tokens":
+        out["tokens"] = P(b_ax, None)
+        out["labels"] = P(b_ax, None)
+    else:
+        out["embeddings"] = P(b_ax, None, None)
+        out["labels"] = P(b_ax, None)
+    if cfg.family == "vlm":
+        out["image_emb"] = P(b_ax, None, None)
+    return out
+
+
+def logits_spec(cfg: ModelConfig, ax: MeshAxes, batch: int) -> P:
+    b_ax = ax.dp if _div(batch, ax.data_size) else None
+    v_ax = _maybe(ax.model, cfg.vocab, ax.size(ax.model))
+    return P(b_ax, None, v_ax)
+
+
+# ---------------------------------------------------------------------------
+# QuantizedTensor spec derivation
+# ---------------------------------------------------------------------------
+
+
+def qt_specs_like(dense_spec: P, qt: QuantizedTensor, ax: MeshAxes) -> QuantizedTensor:
+    """Build a QuantizedTensor whose leaves are PartitionSpecs, matching the
+    dense weight's (possibly layer-stacked) spec ``(…lead, k_ax, o_ax)``."""
+    *lead, k_ax, o_ax = tuple(dense_spec)
+    kc = qt.packed.shape[-2]  # k/8 (possibly under leading stack dims)
+    kg = qt.scales.shape[-2]
+    k_packed = k_ax if (k_ax and _div(kc, ax.size(k_ax))) else None
+    k_scales = k_ax if (k_ax and _div(kg, ax.size(k_ax))) else None
+    return QuantizedTensor(
+        packed=P(*lead, None, k_packed, o_ax),
+        scales=P(*lead, None, k_scales, o_ax),
+        g=qt.g,
+        k=qt.k,
+        o=qt.o,
+    )

@@ -1,0 +1,15 @@
+"""Model-level quantization: per-layer BCQ policies + mixed precision."""
+
+from repro.quant.quantize import (
+    QuantPolicy,
+    quantize_params,
+    quantized_structs,
+    quantized_bytes,
+)
+
+__all__ = [
+    "QuantPolicy",
+    "quantize_params",
+    "quantized_structs",
+    "quantized_bytes",
+]

@@ -1,0 +1,159 @@
+"""Walk a model param pytree and quantize its linear weights to BCQ.
+
+``QuantPolicy`` expresses the paper's search space: one global ``(q, g)`` or a
+*mixed-precision* assignment per sublayer type (attention vs FFN vs LM head —
+paper §V.A / Fig. 12, "all matrices of the same sub-layer type share a (q,g)
+configuration").
+
+``quantize_params`` produces real packed weights; ``quantized_structs``
+produces the same pytree with ShapeDtypeStruct leaves (for dry-run lowering of
+multi-hundred-GB models without allocating them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bcq import quantize_bcq, quantize_bcq_greedy
+from repro.core.packing import pack_signs
+from repro.core.qtensor import QuantizedTensor
+
+# leaves eligible for BCQ (2D (k,o) matmul weights, possibly layer/expert-stacked)
+_QUANT_NAMES = frozenset(
+    {
+        "wq", "wk", "wv", "wo",  # attention
+        "w_gate", "w_up", "w_down",  # (shared-)MLP and MoE experts
+        "w_x", "w_y", "w_a", "w_i", "w_out",  # RG-LRU block linears
+        "w_z", "w_f", "w_o",  # sLSTM / mLSTM gate projections
+        "lm_head",
+    }
+)
+_MIN_DIM = 128  # skip tiny projections (e.g. mLSTM per-head gate (inner, 4))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """(q, g) per sublayer type. ``None`` → use default; g adapts to each k."""
+
+    q: int = 4
+    g: int = 128
+    attn: Optional[Tuple[int, int]] = None  # (q, g) for attention projections
+    ffn: Optional[Tuple[int, int]] = None  # (q, g) for MLP/MoE/recurrent linears
+    lm_head: Optional[Tuple[int, int]] = None
+    skip_lm_head: bool = False
+    method: str = "alternating"  # "alternating" | "greedy"
+    iters: int = 8
+    scale_dtype: str = "bfloat16"
+
+    def resolve(self, path_keys: Tuple[str, ...]) -> Optional[Tuple[int, int]]:
+        name = path_keys[-1]
+        if name not in _QUANT_NAMES:
+            return None
+        if name == "lm_head":
+            if self.skip_lm_head:
+                return None
+            return self.lm_head or (self.q, self.g)
+        if "attn" in path_keys:
+            return self.attn or (self.q, self.g)
+        return self.ffn or (self.q, self.g)
+
+
+def _effective_g(k: int, g: int) -> int:
+    """Largest group size <= g that divides k and is a multiple of 8."""
+    g = min(g, k)
+    while g >= 8:
+        if k % g == 0 and g % 8 == 0:
+            return g
+        g -= 8
+    return 0
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _eligible(leaf, qg) -> bool:
+    return (
+        qg is not None
+        and hasattr(leaf, "ndim")
+        and leaf.ndim >= 2
+        and leaf.shape[-1] >= _MIN_DIM
+        and leaf.shape[-2] >= _MIN_DIM
+        and leaf.shape[-2] % 8 == 0
+    )
+
+
+def _quantize_leaf(leaf: jax.Array, q: int, g: int, policy: QuantPolicy) -> QuantizedTensor:
+    *lead, k, o = leaf.shape
+    g_eff = _effective_g(k, g)
+    if not g_eff:
+        raise ValueError(f"no valid group size for k={k} (requested g={g})")
+    flat = leaf.reshape(-1, k, o).astype(jnp.float32)
+
+    def one(w):
+        if policy.method == "alternating":
+            scales, binary = quantize_bcq(w, q=q, g=g_eff, iters=policy.iters)
+        else:
+            scales, binary = quantize_bcq_greedy(w, q=q, g=g_eff)
+        return pack_signs(binary), scales.astype(jnp.dtype(policy.scale_dtype))
+
+    packed, scales = jax.lax.map(one, flat)
+    packed = packed.reshape(*lead, q, k // 8, o)
+    scales = scales.reshape(*lead, q, k // g_eff, o)
+    return QuantizedTensor(packed=packed, scales=scales, g=g_eff, k=k, o=o)
+
+
+def quantize_params(params, policy: QuantPolicy):
+    """Replace every eligible dense leaf with a packed QuantizedTensor."""
+
+    def visit(path, leaf):
+        qg = policy.resolve(_path_names(path))
+        if not _eligible(leaf, qg):
+            return leaf
+        return _quantize_leaf(leaf, qg[0], qg[1], policy)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def quantized_structs(param_structs, policy: QuantPolicy):
+    """Same tree surgery, but on ShapeDtypeStructs (no data, no compute)."""
+
+    def visit(path, leaf):
+        qg = policy.resolve(_path_names(path))
+        if not _eligible(leaf, qg):
+            return leaf
+        *lead, k, o = leaf.shape
+        q, g = qg
+        g_eff = _effective_g(k, g)
+        return QuantizedTensor(
+            packed=jax.ShapeDtypeStruct((*lead, q, k // 8, o), jnp.uint8),
+            scales=jax.ShapeDtypeStruct(
+                (*lead, q, k // g_eff, o), jnp.dtype(policy.scale_dtype)
+            ),
+            g=g_eff,
+            k=k,
+            o=o,
+        )
+
+    return jax.tree_util.tree_map_with_path(visit, param_structs)
+
+
+def quantized_bytes(tree) -> int:
+    """Total parameter bytes (packed where quantized)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total

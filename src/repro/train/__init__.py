@@ -1,0 +1,22 @@
+"""Training runtime: optimizer, steps, loop, checkpointing, compression."""
+
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.train.step import (
+    cross_entropy,
+    loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "cross_entropy",
+    "loss_fn",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

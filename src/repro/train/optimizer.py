@@ -1,0 +1,74 @@
+"""AdamW implemented from scratch (no optax dependency).
+
+First/second moments are f32 regardless of param dtype; the update is computed
+in f32 and cast back. Moment state shards exactly like its parameter (the
+optimizer is elementwise), so FSDP covers optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array  # () int32
+    m: Any  # pytree like params (f32)
+    v: Any  # pytree like params (f32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.int32(0), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, global_grad_norm)."""
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)) + 1e-12
+    )
+    if grad_clip:
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, gf)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, gf)
+
+    def upd(p, m, v):
+        mh = m / c1
+        vh = v / c2
+        pf = p.astype(jnp.float32)
+        out = pf - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * pf)
+        return out.astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def cosine_lr(step: jax.Array, *, peak: float, warmup: int, total: int) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

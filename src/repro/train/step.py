@@ -1,0 +1,137 @@
+"""Loss and train/prefill/serve step functions (the units the dry-run lowers).
+
+``train_step`` is a full fused step: forward (scan + remat) → cross-entropy →
+backward → AdamW. ``make_*_step`` return closures over the static config so
+they jit/lower cleanly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamWState, adamw_update
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; labels < 0 are masked. logits (B,S,V) f32, labels (B,S)."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, *, remat: bool = True):
+    kwargs = {}
+    if cfg.input_kind == "tokens":
+        kwargs["tokens"] = batch["tokens"]
+    else:
+        kwargs["embeddings"] = batch["embeddings"]
+    if cfg.family == "vlm":
+        kwargs["image_emb"] = batch.get("image_emb")
+    logits, _, aux = forward(cfg, params, **kwargs, remat=remat)
+    loss = cross_entropy(logits, batch["labels"])
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"loss": loss, "moe_aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig, *, remat: bool = True, lr: float = 3e-4, accum_steps: int = 1
+):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    ``accum_steps > 1`` runs gradient accumulation over microbatches via
+    lax.scan: live activations scale with the microbatch, which is what lets
+    the 1M-token train_4k shape fit 16 GB HBM on the deep archs (the f32 grad
+    accumulator costs 4·N/chips — cheap next to saved activations).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        if accum_steps == 1:
+            (_, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    accum_steps, x.shape[0] // accum_steps, *x.shape[1:]
+                ),
+                batch,
+            )
+
+            def body(gsum, mb):
+                (_, m), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return gsum, m
+
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            gsum, ms = jax.lax.scan(body, gsum0, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, lr=jnp.float32(lr)
+        )
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: Optional[int] = None):
+    """(params, batch, cache) → (last-position logits, filled cache)."""
+
+    def prefill_step(params, batch: dict, cache):
+        kwargs = {}
+        if cfg.input_kind == "tokens":
+            kwargs["tokens"] = batch["tokens"]
+        else:
+            kwargs["embeddings"] = batch["embeddings"]
+        if cfg.family == "vlm":
+            kwargs["image_emb"] = batch.get("image_emb")
+        logits, cache, _ = forward(
+            cfg, params, **kwargs, cache=cache, pos=jnp.int32(0), logits_mode="last"
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, inputs, pos) → (logits (B,1,V), cache).
+
+    This is what the ``decode_*`` / ``long_*`` dry-run shapes lower: one new
+    token against a seq_len-deep KV cache / recurrent state, with weights that
+    may be packed BCQ QuantizedTensors (the paper's generation stage,
+    Fig. 13 right branch).
+    """
+
+    def serve_step(params, cache, batch: dict, pos):
+        kwargs = {}
+        if cfg.input_kind == "tokens":
+            kwargs["tokens"] = batch["tokens"]
+        else:
+            kwargs["embeddings"] = batch["embeddings"]
+        if cfg.family == "vlm":
+            kwargs["image_emb"] = None  # cached cross-KV
+        logits, cache, _ = forward(
+            cfg, params, **kwargs, cache=cache, pos=pos, logits_mode="last"
+        )
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,147 @@
+"""Unit + property tests for the group-wise BCQ quantizer (paper §III.A)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    bcq_error,
+    compression_ratio,
+    dequantize,
+    pack_signs,
+    quantize_bcq,
+    quantize_bcq_greedy,
+    unpack_signs,
+)
+
+
+def _w(rng, k=128, o=32):
+    return jnp.asarray(rng.standard_normal((k, o)), jnp.float32)
+
+
+def test_shapes(rng):
+    w = _w(rng, 128, 32)
+    scales, binary = quantize_bcq_greedy(w, q=3, g=16)
+    assert scales.shape == (3, 8, 32)
+    assert binary.shape == (3, 128, 32)
+    assert set(np.unique(np.asarray(binary))) <= {-1, 1}
+
+
+def test_q1_rowwise_is_optimal_sign_scale(rng):
+    """q=1 greedy = sign(w)·mean|w| per group — the analytic optimum."""
+    w = _w(rng, 64, 8)
+    scales, binary = quantize_bcq_greedy(w, q=1, g=64)
+    np.testing.assert_allclose(
+        np.asarray(binary[0]), np.sign(np.asarray(w)), rtol=0, atol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(scales[0, 0]), np.abs(np.asarray(w)).mean(0), rtol=1e-5
+    )
+
+
+def test_exact_recovery_of_bcq_representable(rng):
+    """A matrix that IS a 1-bit code times a scale quantizes losslessly."""
+    signs = jnp.asarray(np.sign(rng.standard_normal((64, 16))), jnp.float32)
+    w = 0.37 * signs
+    scales, binary = quantize_bcq_greedy(w, q=1, g=8)
+    assert float(bcq_error(w, scales, binary, 8)) < 1e-6
+
+
+def test_error_decreases_with_q(rng):
+    w = _w(rng)
+    errs = []
+    for q in (1, 2, 3, 4):
+        s, b = quantize_bcq(w, q=q, g=32, iters=5)
+        errs.append(float(bcq_error(w, s, b, 32)))
+    assert all(e1 > e2 for e1, e2 in zip(errs, errs[1:])), errs
+
+
+def test_error_decreases_with_smaller_g(rng):
+    """Paper §III.A(b): smaller group size → lower quantization error."""
+    w = _w(rng)
+    errs = []
+    for g in (128, 32, 8):
+        s, b = quantize_bcq_greedy(w, q=2, g=g)
+        errs.append(float(bcq_error(w, s, b, g)))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_alternating_beats_greedy(rng):
+    w = _w(rng)
+    sg, bg = quantize_bcq_greedy(w, q=3, g=32)
+    sa, ba = quantize_bcq(w, q=3, g=32, iters=8)
+    assert float(bcq_error(w, sa, ba, 32)) <= float(bcq_error(w, sg, bg, 32)) + 1e-6
+
+
+def test_gaussian_q1_error_matches_theory(rng):
+    """Row-wise 1-bit error on N(0,1) is sqrt(1 - 2/pi) ≈ 0.6028."""
+    w = jnp.asarray(rng.standard_normal((4096, 64)), jnp.float32)
+    s, b = quantize_bcq_greedy(w, q=1, g=4096)
+    err = float(bcq_error(w, s, b, 4096))
+    assert abs(err - np.sqrt(1 - 2 / np.pi)) < 0.01
+
+
+def test_bad_args(rng):
+    w = _w(rng)
+    with pytest.raises(ValueError):
+        quantize_bcq_greedy(w, q=0, g=32)
+    with pytest.raises(ValueError):
+        quantize_bcq_greedy(w, q=2, g=4)  # g < 8
+    with pytest.raises(ValueError):
+        quantize_bcq_greedy(w, q=2, g=48)  # g does not divide k
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kc=st.integers(1, 8),
+    o=st.integers(1, 40),
+    q=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(kc, o, q, seed):
+    r = np.random.default_rng(seed)
+    binary = jnp.asarray(r.choice([-1, 1], size=(q, kc * 8, o)), jnp.int8)
+    assert (unpack_signs(pack_signs(binary)) == binary).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g_exp=st.integers(3, 6),
+    q=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequantize_reconstruction_error_bounded(g_exp, q, seed):
+    """Property: relative error is always in [0, 1] and greedy error shrinks
+    monotonically in q for the SAME matrix (residual property)."""
+    r = np.random.default_rng(seed)
+    g = 2**g_exp
+    w = jnp.asarray(r.standard_normal((128, 16)), jnp.float32)
+    s, b = quantize_bcq_greedy(w, q=q, g=g)
+    err = float(bcq_error(w, s, b, g))
+    assert 0.0 <= err <= 1.0 + 1e-6
+    if q > 1:
+        s2, b2 = quantize_bcq_greedy(w, q=q - 1, g=g)
+        assert err <= float(bcq_error(w, s2, b2, g)) + 1e-6
+
+
+def test_compression_ratio_eq3():
+    # paper Eq. (3): q bits + scale_bits/g per weight
+    assert compression_ratio(4, 128, base_bits=32, scale_bits=32) == pytest.approx(
+        32 / (4 * (1 + 32 / 128))
+    )
+    # row-wise large-g limit → base/q
+    assert compression_ratio(2, 10**9, base_bits=16, scale_bits=16) == pytest.approx(
+        8.0, rel=1e-6
+    )
+
+
+def test_dequantize_leading_dims(rng):
+    w = _w(rng, 64, 16)
+    s, b = quantize_bcq_greedy(w, q=2, g=16)
+    stacked_s = jnp.stack([s, s])
+    stacked_b = jnp.stack([b, b])
+    out = dequantize(stacked_s, stacked_b, 16)
+    assert out.shape == (2, 64, 16)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]))

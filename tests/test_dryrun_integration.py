@@ -1,0 +1,62 @@
+"""Integration tests for the multi-pod dry-run machinery (subprocess: needs
+512 placeholder devices, which must not leak into this test session)."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+_CELL_CODE = """
+import json
+from repro.launch.dryrun import run_cell
+res = run_cell("{arch}", "{shape}", "{mesh}", {q}, verbose=False)
+print("CELL-JSON:" + json.dumps({{
+    "dominant": res["roofline"]["dominant"],
+    "flops": res["roofline"]["flops_per_chip"],
+    "bytes": res["roofline"]["bytes_per_chip"],
+    "chips": res["chips"],
+    "unparsed": res["trip_aware"]["unparsed_loops"],
+}}))
+"""
+
+
+def _run_cell(arch, shape, mesh, q):
+    code = _CELL_CODE.format(arch=arch, shape=shape, mesh=mesh, q=q)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("CELL-JSON:")][0]
+    return json.loads(line[len("CELL-JSON:"):])
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_single_pod():
+    res = _run_cell("xlstm-125m", "decode_32k", "single", 4)
+    assert res["chips"] == 256
+    assert res["flops"] > 0 and res["bytes"] > 0
+    assert res["unparsed"] == 0  # every while loop's trip count parsed
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_multi_pod():
+    res = _run_cell("xlstm-125m", "train_4k", "multi", 0)
+    assert res["chips"] == 512
+    assert res["flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_long_context_skip():
+    code = (
+        "from repro.launch.dryrun import input_specs, SkipCell\n"
+        "try:\n"
+        "    input_specs('llama3.2-3b', 'long_500k', 4)\n"
+        "    print('NO-SKIP')\n"
+        "except SkipCell:\n"
+        "    print('SKIPPED-OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=300
+    )
+    assert "SKIPPED-OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,46 @@
+"""Flash-attention Pallas kernel vs the jnp oracle (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention
+from repro.models.layers import _sdpa, causal_mask
+
+
+def _qkv(rng, b, s, h, hkv, dh, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,s,h,hkv,dh,bq,bk",
+    [
+        (2, 512, 4, 4, 64, 256, 256),  # MHA
+        (1, 1024, 8, 2, 32, 256, 512),  # GQA group 4, rectangular tiles
+        (2, 512, 6, 1, 64, 128, 128),  # MQA
+        (1, 512, 2, 2, 128, 512, 256),  # single q tile
+    ],
+)
+def test_flash_matches_oracle(rng, b, s, h, hkv, dh, bq, bk):
+    q, k, v = _qkv(rng, b, s, h, hkv, dh)
+    ref = _sdpa(q, k, v, causal_mask(s, s))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 1, 512, 4, 2, 64, dtype=jnp.bfloat16)
+    ref = _sdpa(q, k, v, causal_mask(512, 512))
+    out = flash_attention(q, k, v, block_q=256, block_k=256, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_flash_rejects_bad_blocks(rng):
+    q, k, v = _qkv(rng, 1, 500, 2, 2, 32)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=256, block_k=256, interpret=True)

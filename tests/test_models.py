@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + cached-decode
+consistency. Covers deliverable (f)'s smoke requirement for all 10 archs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import forward, init_cache, init_params, reduced
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _inputs(cfg, s=S):
+    kwargs = {}
+    if cfg.input_kind == "tokens":
+        kwargs["tokens"] = jax.random.randint(KEY, (B, s), 0, cfg.vocab)
+    else:
+        kwargs["embeddings"] = jax.random.normal(KEY, (B, s, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        kwargs["image_emb"] = jax.random.normal(
+            KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32
+        )
+    return kwargs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(KEY, cfg)
+    logits, _, aux = forward(cfg, params, **_inputs(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    assert not bool(jnp.isnan(aux)), f"{arch}: NaN aux"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    from repro.train import adamw_init, make_train_step
+
+    cfg = reduced(get_config(arch))
+    params = init_params(KEY, cfg)
+    opt = adamw_init(params)
+    batch = dict(_inputs(cfg))
+    batch["labels"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    step = jax.jit(make_train_step(cfg, remat=True, lr=1e-3))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, f"{arch}: optimizer step did not change params"
+
+
+@pytest.mark.parametrize(
+    "arch,tol",
+    [
+        ("llama3.2-3b", 2e-4),
+        ("starcoder2-7b", 2e-4),
+        ("musicgen-medium", 2e-4),
+        ("recurrentgemma-9b", 5e-4),
+        ("xlstm-125m", 5e-4),
+        ("llama-3.2-vision-90b", 5e-4),
+    ],
+)
+def test_prefill_decode_matches_train_forward(arch, tol):
+    """Cached prefill+decode logits must equal the full forward's."""
+    cfg = reduced(get_config(arch))
+    params = init_params(KEY, cfg)
+    kwargs = _inputs(cfg)
+    full, _, _ = forward(cfg, params, **kwargs)
+    cache = init_cache(cfg, B, S)
+    pre = {
+        k: (v if k == "image_emb" else v[:, : S - 1]) for k, v in kwargs.items()
+    }
+    lp, cache, _ = forward(
+        cfg, params, **pre, cache=cache, pos=jnp.int32(0), logits_mode="last"
+    )
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(full[:, S - 2]), rtol=tol, atol=tol
+    )
+    last = {
+        k: (None if k == "image_emb" else v[:, S - 1 :]) for k, v in kwargs.items()
+    }
+    lp2, _, _ = forward(
+        cfg, params, **last, cache=cache, pos=jnp.int32(S - 1), logits_mode="last"
+    )
+    np.testing.assert_allclose(
+        np.asarray(lp2[:, 0]), np.asarray(full[:, S - 1]), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "llama4-maverick-400b-a17b"])
+def test_moe_consistency_at_no_drop_capacity(arch):
+    base = reduced(get_config(arch))
+    cfg = reduced(
+        get_config(arch), capacity_factor=float(base.n_experts / base.top_k)
+    )
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full, _, _ = forward(cfg, params, tokens=toks)
+    cache = init_cache(cfg, B, S)
+    lp, cache, _ = forward(
+        cfg, params, tokens=toks[:, : S - 1], cache=cache, pos=jnp.int32(0),
+        logits_mode="last",
+    )
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(full[:, S - 2]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_long_context_support_flags():
+    sub_quadratic = {a for a in ARCH_IDS if get_config(a).supports_long_context}
+    assert sub_quadratic == {"recurrentgemma-9b", "xlstm-125m"}
+
+
+def test_local_attention_ring_decode_beyond_window():
+    """Decode past the window: ring buffer must keep only the last `window`."""
+    cfg = reduced(get_config("recurrentgemma-9b"), window=8)
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, 24), 0, cfg.vocab)
+    full, _, _ = forward(cfg, params, tokens=toks)
+    cache = init_cache(cfg, B, 24)
+    lp, cache, _ = forward(
+        cfg, params, tokens=toks[:, :-1], cache=cache, pos=jnp.int32(0),
+        logits_mode="last",
+    )
+    lp2, _, _ = forward(
+        cfg, params, tokens=toks[:, -1:], cache=cache, pos=jnp.int32(23),
+        logits_mode="last",
+    )
+    np.testing.assert_allclose(
+        np.asarray(lp2[:, 0]), np.asarray(full[:, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_exact_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyper-parameters."""
+    expect = {
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+            L, d, h, kv, ff, v,
+        ), arch
+    assert get_config("olmoe-1b-7b").n_experts == 64
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("llama4-maverick-400b-a17b").n_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").top_k == 1
+    assert get_config("llama4-maverick-400b-a17b").shared_expert
+    assert get_config("recurrentgemma-9b").window == 2048
+
+
+def test_int8_kv_cache_decode_close_to_exact():
+    """Beyond-paper int8 KV cache: decode logits within 5% of the bf16 cache."""
+    import dataclasses
+
+    cfg = reduced(get_config("llama3.2-3b"), d_model=128, n_kv_heads=4)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8", stages=None)
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full, _, _ = forward(cfg, params, tokens=toks)
+    cache = init_cache(cfg8, B, S)
+    assert cache["stages"][0]["b0"]["k"].dtype == jnp.int8
+    assert "k_scale" in cache["stages"][0]["b0"]
+    _, cache, _ = forward(
+        cfg8, params, tokens=toks[:, : S - 1], cache=cache, pos=jnp.int32(0),
+        logits_mode="last",
+    )
+    lp2, _, _ = forward(
+        cfg8, params, tokens=toks[:, S - 1 :], cache=cache, pos=jnp.int32(S - 1),
+        logits_mode="last",
+    )
+    rel = float(
+        jnp.linalg.norm(lp2[:, 0] - full[:, S - 1]) / jnp.linalg.norm(full[:, S - 1])
+    )
+    assert rel < 0.05, rel

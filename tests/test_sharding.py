@@ -1,0 +1,116 @@
+"""Distribution rules: spec trees mirror param/cache trees, every sharded dim
+divides its axis, QT spec derivation, for all 10 archs × both meshes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import init_cache, init_params
+from repro.parallel import (
+    batch_specs,
+    cache_specs,
+    multi_pod_axes,
+    param_specs,
+    single_pod_axes,
+)
+from repro.parallel.sharding import qt_specs_like
+
+AXES = {"single": single_pod_axes(), "multi": multi_pod_axes()}
+
+
+def _check_divisible(struct_tree, spec_tree, ax, where):
+    def visit(leaf, spec):
+        assert isinstance(spec, P), f"{where}: spec {spec} for {leaf}"
+        assert len(spec) <= len(leaf.shape), f"{where}: rank mismatch {spec} {leaf.shape}"
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            size = ax.size(axis if not isinstance(axis, tuple) else tuple(axis))
+            assert dim % size == 0, f"{where}: dim {dim} not divisible by {axis}={size}"
+
+    jax.tree.map(visit, struct_tree, spec_tree,
+                 is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_param_specs_structure_and_divisibility(arch, mesh_kind):
+    cfg = get_config(arch)
+    ax = AXES[mesh_kind]
+    structs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, ax)
+    assert jax.tree.structure(structs) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    _check_divisible(structs, specs, ax, f"{arch}/{mesh_kind}/params")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_cache_specs_structure_and_divisibility(arch, mesh_kind):
+    cfg = get_config(arch)
+    ax = AXES[mesh_kind]
+    batch = 128
+    structs = jax.eval_shape(lambda: init_cache(cfg, batch, 1024))
+    specs = cache_specs(cfg, ax, batch)
+    assert jax.tree.structure(structs) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    _check_divisible(structs, specs, ax, f"{arch}/{mesh_kind}/cache")
+
+
+def test_batch_specs_fall_back_when_indivisible():
+    cfg = get_config("llama3.2-3b")
+    ax = multi_pod_axes()  # dp = 32
+    bs = batch_specs(cfg, ax, 1)  # long_500k batch=1
+    assert tuple(bs["tokens"]) == (None, None)
+    bs2 = batch_specs(cfg, ax, 256)
+    assert tuple(bs2["tokens"])[0] == ("pod", "data")
+
+
+def test_qt_specs_like():
+    from repro.core.qtensor import QuantizedTensor
+
+    ax = single_pod_axes()
+    qt = QuantizedTensor(
+        packed=jax.ShapeDtypeStruct((4, 384, 8192), jnp.uint8),
+        scales=jax.ShapeDtypeStruct((4, 24, 8192), jnp.bfloat16),
+        g=128, k=3072, o=8192,
+    )
+    spec = qt_specs_like(P("data", "model"), qt, ax)
+    assert tuple(spec.packed) == (None, "data", "model")
+    # scales k-dim 24 not divisible by 16 → replicated on that dim
+    assert tuple(spec.scales) == (None, None, "model")
+    # stacked (layer) leading dim
+    qt2 = QuantizedTensor(
+        packed=jax.ShapeDtypeStruct((28, 4, 384, 8192), jnp.uint8),
+        scales=jax.ShapeDtypeStruct((28, 4, 24, 8192), jnp.bfloat16),
+        g=128, k=3072, o=8192,
+    )
+    spec2 = qt_specs_like(P(None, "data", "model"), qt2, ax)
+    assert tuple(spec2.packed) == (None, None, "data", "model")
+
+
+def test_mesh_construction_subprocess():
+    """The production mesh needs 512 placeholder devices — verify in a child
+    process so the test session keeps its single-device view."""
+    import subprocess
+    import sys
+
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.mesh import make_production_mesh\n"
+        "m1 = make_production_mesh(multi_pod=False)\n"
+        "assert m1.devices.shape == (16, 16) and m1.axis_names == ('data', 'model')\n"
+        "m2 = make_production_mesh(multi_pod=True)\n"
+        "assert m2.devices.shape == (2, 16, 16)\n"
+        "assert m2.axis_names == ('pod', 'data', 'model')\n"
+        "print('MESH-OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=300
+    )
+    assert "MESH-OK" in out.stdout, out.stderr[-2000:]
