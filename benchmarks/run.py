@@ -3,11 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV. TPU numbers come from the v5e
 roofline model (this container is CPU-only); CPU wall-times are functional
 sanity checks only. Run: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+``--json PATH`` additionally records the rows as a JSON list of
+``{name, us_per_call, derived}`` objects — used to check in decode-path
+baselines (``BENCH_decode.json``) that later PRs can diff against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,6 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip training-based figs")
     ap.add_argument("--only", default=None, help="comma-list of module tags")
+    ap.add_argument("--json", default=None, help="also write rows to this JSON file")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -43,15 +49,30 @@ def main() -> None:
         keep = set(args.only.split(","))
         modules = [(t, m) for t, m in modules if t in keep]
 
+    collected = []
     print("name,us_per_call,derived")
     for tag, mod in modules:
         t0 = time.time()
         try:
             for row in mod.run():
                 print(row)
+                collected.append(row)
         except Exception as e:  # keep the harness going; report the failure
-            print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
+            err = f"{tag}/ERROR,0,{type(e).__name__}:{e}"
+            print(err, file=sys.stdout)
+            collected.append(err)  # JSON baselines must record the failure too
         print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        records = []
+        for row in collected:
+            name, us, derived = row.split(",", 2)
+            records.append(
+                {"name": name, "us_per_call": float(us), "derived": derived}
+            )
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

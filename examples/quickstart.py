@@ -1,6 +1,12 @@
 """Quickstart: group-wise BCQ quantization + LUT-GEMM in ~30 lines.
 
 PYTHONPATH=src python examples/quickstart.py
+
+This exercises the single-matmul building block. End-to-end generation goes
+through ``repro.infer.Engine``, whose decode runs as one on-device
+``lax.scan`` by default (``generate(..., scan=True)``; pass ``scan=False``
+for the per-token step loop) with QKV/gate-up projections fused into single
+kernel passes — see DESIGN.md §2.3/§3 and ``repro.launch.serve``.
 """
 
 import jax.numpy as jnp

@@ -8,13 +8,14 @@ from repro.core.bcq import (
     quantize_bcq_greedy,
 )
 from repro.core.packing import pack_signs, unpack_signs
-from repro.core.qtensor import QuantizedTensor, quantize_tensor
+from repro.core.qtensor import QuantizedTensor, fuse_tensors, quantize_tensor
 
 __all__ = [
     "QuantizedTensor",
     "bcq_error",
     "compression_ratio",
     "dequantize",
+    "fuse_tensors",
     "pack_signs",
     "quantize_bcq",
     "quantize_bcq_greedy",

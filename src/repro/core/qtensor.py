@@ -10,7 +10,7 @@ Memory per weight (paper Eq. 3): ``q·(1 + scale_bits/g)`` bits vs 16 (bf16).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,34 @@ class QuantizedTensor:
     def nbytes(self) -> int:
         """Packed size in bytes (binary + scales)."""
         return int(self.packed.size) + int(self.scales.size) * self.scales.dtype.itemsize
+
+
+def fuse_tensors(qts: Sequence[QuantizedTensor]) -> QuantizedTensor:
+    """Concatenate N quantized projections along the output dim (DESIGN.md §2.3).
+
+    One-time weight-prep for the fused multi-projection kernel: the result's
+    ``x @ W`` equals the per-tensor products side by side, so a single kernel
+    pass serves all N projections. Requires identical ``(k, q, g)`` and scale
+    dtype — true for Q/K/V and gate/up under any per-sublayer-type policy.
+    """
+    first = qts[0]
+    for t in qts[1:]:
+        if (t.k, t.q, t.g) != (first.k, first.q, first.g):
+            raise ValueError(
+                f"cannot fuse: (k, q, g) mismatch {(t.k, t.q, t.g)} vs "
+                f"{(first.k, first.q, first.g)}"
+            )
+        if t.scales.dtype != first.scales.dtype:
+            raise ValueError("cannot fuse: scale dtype mismatch")
+        if t.packed.shape[:-1] != first.packed.shape[:-1]:
+            raise ValueError("cannot fuse: leading (layer/expert) dims differ")
+    return QuantizedTensor(
+        packed=jnp.concatenate([t.packed for t in qts], axis=-1),
+        scales=jnp.concatenate([t.scales for t in qts], axis=-1),
+        g=first.g,
+        k=first.k,
+        o=sum(t.o for t in qts),
+    )
 
 
 def quantize_tensor(

@@ -12,6 +12,26 @@ them differently:
 
 The engine also serves *dense* models (pass unquantized params) so the
 cuBLAS-analogue baseline uses the identical code path.
+
+Decode fast path (DESIGN.md §2.3): at construction the params are run through
+:func:`repro.models.fuse_decode_projections` (``fuse=True`` default) so QKV and
+gate/up issue one fused projection kernel each, and ``generate`` runs all N
+decode steps as a single jitted ``jax.lax.scan`` (``scan=True`` default) —
+sampling happens on device inside the scan body, the KV cache is threaded
+through the carry, and the host syncs once for the whole sequence instead of
+once per token. Embedding-input (modality-stub) models fall back to the
+per-token step loop because ``embed_fn`` runs host-side.
+
+Caveat (TPU): the scan threads the KV cache through the carry — the body
+reads the whole cache and dynamic-update-slices one slot per step. This is
+the standard JAX decode idiom (XLA's while-loop lowering updates loop-carried
+buffers in place), but it is a *different* access pattern from the
+layer-stacked cache-as-carry variant that ``models/layers.py::_cache_write``
+measured and rejected (dynamic per-layer slice reads triggered copy-insertion
+duplication of the carry). CPU-host timings (BENCH_decode.json: 1.44x over
+the step loop) cannot rule that pathology out on TPU — profile HBM traffic
+there before relying on the scan path at large ``max_seq``; ``scan=False``
+is the escape hatch.
 """
 
 from __future__ import annotations
@@ -23,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import forward, init_cache
+from repro.models import forward, fuse_decode_projections, init_cache
 from repro.models.config import ModelConfig
 
 
@@ -34,13 +54,31 @@ class GenerationResult:
     steps: int
 
 
+def _sample(logits: jax.Array, key: jax.Array, temperature, greedy: bool) -> jax.Array:
+    """(B, V) f32 logits → (B,) int32 tokens, on device."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature)
+
+
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 2048, embed_fn=None):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_seq: int = 2048,
+        embed_fn=None,
+        fuse: bool = True,
+    ):
         """``embed_fn(tokens (B,1) int32) → (B,1,D)`` is required for
         embedding-input (modality-stub) models to feed sampled codes back in —
-        it stands in for the stubbed frontend (e.g. EnCodec codebook embed)."""
+        it stands in for the stubbed frontend (e.g. EnCodec codebook embed).
+
+        ``fuse=False`` keeps the unfused per-projection weight layout
+        (debugging / layouts the fuser declines are left unfused anyway)."""
         self.cfg = cfg
-        self.params = params
+        self.params = fuse_decode_projections(cfg, params) if fuse else params
         self.max_seq = max_seq
         self.embed_fn = embed_fn
 
@@ -66,8 +104,32 @@ class Engine:
             )
             return logits, cache
 
+        def _scan_decode(params, logits0, cache, pos0, key, temperature, *, n_steps, greedy):
+            """N decode steps as ONE dispatch: sample → step, all on device.
+
+            The carry holds (last logits, cache, position, PRNG key); the
+            stacked scan output is the sampled token matrix. The key-split /
+            sample order matches the step loop exactly, so scanned and
+            step-loop generations are bit-identical (test_engine_scan).
+            """
+
+            def body(carry, _):
+                logits, cache, pos, key = carry
+                key, sub = jax.random.split(key)
+                tok = _sample(logits, sub, temperature, greedy)
+                logits2, cache = _decode(params, tok[:, None], cache, pos)
+                return (logits2[:, -1], cache, pos + 1, key), tok
+
+            (_, cache, _, _), toks = jax.lax.scan(
+                body, (logits0, cache, pos0, key), None, length=n_steps
+            )
+            return toks.T, cache  # (B, n_steps)
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._scan_decode = jax.jit(
+            _scan_decode, static_argnames=("n_steps", "greedy")
+        )
 
     def generate(
         self,
@@ -77,8 +139,19 @@ class Engine:
         image_emb: Optional[np.ndarray] = None,
         temperature: float = 0.0,
         seed: int = 0,
+        scan: bool = True,
     ) -> GenerationResult:
-        """Greedy (temperature=0) or sampled autoregressive generation."""
+        """Greedy (temperature=0) or sampled autoregressive generation.
+
+        ``scan=True`` (default) runs the whole decode as one on-device
+        ``lax.scan`` for tokens-input models; ``scan=False`` forces the
+        per-token step loop (always used for embedding-input models, whose
+        host-side ``embed_fn`` cannot run inside the scan).
+
+        ``n_steps`` is a static scan length: each *distinct* value compiles
+        its own scan graph once (then cached for the engine's lifetime).
+        Serving highly variable lengths? Bucket them, or use ``scan=False``
+        whose single ``_decode`` compilation covers every length."""
         cfg = self.cfg
         b, s = prompt_tokens.shape[:2]
         cache = init_cache(cfg, b, self.max_seq)
@@ -86,12 +159,27 @@ class Engine:
             self.params, jnp.asarray(prompt_tokens), image_emb, cache
         )
         key = jax.random.PRNGKey(seed)
+        greedy = temperature <= 0
+
+        if scan and cfg.input_kind == "tokens":
+            toks, _ = self._scan_decode(
+                self.params,
+                logits[:, -1],
+                cache,
+                jnp.int32(s),
+                key,
+                jnp.float32(temperature if not greedy else 1.0),
+                n_steps=n_steps,
+                greedy=greedy,
+            )
+            tokens = np.concatenate([np.asarray(prompt_tokens), np.asarray(toks)], axis=1)
+            return GenerationResult(tokens=tokens, prompt_len=s, steps=n_steps)
+
         out = [np.asarray(prompt_tokens)] if cfg.input_kind == "tokens" else []
-        tok = None
         for step in range(n_steps):
-            if temperature > 0:
+            if not greedy:
                 key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+                tok = _sample(logits[:, -1], sub, temperature, greedy=False)[:, None]
             else:
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
             out.append(np.asarray(tok))

@@ -1,23 +1,29 @@
 """Pallas TPU kernels for LUT-GEMM (pl.pallas_call + BlockSpec VMEM tiling).
 
-- ``lutgemm.py``  paper-faithful LUT-based quantized matvec/matmul
-- ``bcq_mm.py``   fused unpack→MXU variant (TPU-native, beyond-paper)
-- ``ops.py``      jit'd dispatch wrappers (+ pure-JAX fallback)
-- ``ref.py``      pure-jnp oracles
+- ``lutgemm.py``      paper-faithful LUT-based quantized matvec/matmul
+- ``bcq_mm.py``       fused unpack→MXU variant (TPU-native, beyond-paper)
+- ``bcq_mm_fused.py`` multi-projection (QKV / gate-up) decode fast path
+- ``autotune.py``     measured (block_k, block_o) schedule table
+- ``ops.py``          jit'd dispatch wrappers (+ pure-JAX fallback)
+- ``ref.py``          pure-jnp oracles
 """
 
 from repro.kernels.bcq_mm import bcq_mm
+from repro.kernels.bcq_mm_fused import bcq_mm_fused
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.lutgemm import lutgemm
-from repro.kernels.ops import linear, quantized_matmul
+from repro.kernels.ops import linear, linear_fused, quantized_matmul, quantized_matmul_fused
 from repro.kernels.ref import bcq_mm_ref, lutgemm_tablewise_ref
 
 __all__ = [
     "bcq_mm",
+    "bcq_mm_fused",
     "bcq_mm_ref",
     "flash_attention",
     "linear",
+    "linear_fused",
     "lutgemm",
     "lutgemm_tablewise_ref",
     "quantized_matmul",
+    "quantized_matmul_fused",
 ]

@@ -1,0 +1,256 @@
+"""Measured (block_k, block_o) autotuner for the BCQ Pallas kernels.
+
+The first version of ``ops.quantized_matmul`` hardcoded ``(512, 256, 128, 64)``
+preference-ordered block candidates — a single schedule for every shape, batch
+and kernel variant. But the best tiling is shape-dependent: decode (B=1) wants
+wide output blocks to amortise the activation fetch, GQA K/V projections have
+small output dims, and the LUT kernel's VMEM budget (a ``(B, C, 256)`` table
+per k-block) caps ``block_k`` differently from the unpack kernel. FLUTE
+(Guo et al., 2024) makes the same point for GPU LUT kernels.
+
+Resolution order for a ``(B, k, o, q, g, impl, backend)`` query:
+
+1. **in-process cache** — one dict lookup after the first query;
+2. **persisted JSON tables** — the checked-in defaults
+   (``autotune_table.json`` next to this module, common decode/config shapes)
+   and the user cache (``$REPRO_AUTOTUNE_CACHE``, default
+   ``~/.cache/repro/autotune.json``);
+3. **measurement** — unless ``REPRO_AUTOTUNE=0``, sweep the valid candidate
+   grid with synthetic inputs, pick the fastest, persist the winner;
+4. **heuristic fallback** — the old preference order (largest dividing block),
+   so unknown shapes and opted-out runs behave exactly like the pre-autotuner
+   dispatch. This is also the no-measurement answer for shapes the tables
+   don't know.
+
+Keys deliberately include the backend (``cpu``/``tpu``/… plus ``-interpret``)
+so CPU interpret-mode timings can never masquerade as TPU schedules.
+
+Reproducibility note: ``block_k`` partitions the f32 accumulation, so two
+hosts that measure different winners can produce bitwise-different logits
+(same math, different reduction split). For cross-host bit-reproducibility
+set ``REPRO_AUTOTUNE=0`` — the heuristic/table path is fully deterministic —
+or ship a pinned table via ``REPRO_AUTOTUNE_CACHE``. The test suite pins
+``REPRO_AUTOTUNE=0`` for exactly this reason (tests/conftest.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CANDIDATE_K = (1024, 512, 256, 128, 64)
+_CANDIDATE_O = (512, 256, 128, 64)
+_PICK_ORDER = (512, 256, 128, 64)  # legacy heuristic preference order
+
+_TABLE_PATH = os.path.join(os.path.dirname(__file__), "autotune_table.json")
+
+# in-process winners: key -> (block_k, block_o)
+_cache: Dict[str, Tuple[int, int]] = {}
+_persisted_loaded = False
+
+
+def _user_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+    )
+
+
+def measurement_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def make_key(B: int, k: int, o: int, q: int, g: int, impl: str, backend: str) -> str:
+    return f"{impl}/{backend}/B{B}/k{k}/o{o}/q{q}/g{g}"
+
+
+def backend_tag(interpret: bool) -> str:
+    tag = jax.default_backend()
+    return f"{tag}-interpret" if interpret else tag
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def _load_table(path: str) -> Dict[str, Tuple[int, int]]:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        return {k: tuple(v) for k, v in raw.items() if len(v) == 2}
+    except (OSError, ValueError):
+        return {}
+
+
+def _ensure_persisted_loaded() -> None:
+    global _persisted_loaded
+    if _persisted_loaded:
+        return
+    # user cache wins over checked-in defaults: it was measured on this host
+    merged = _load_table(_TABLE_PATH)
+    merged.update(_load_table(_user_cache_path()))
+    for key, blocks in merged.items():
+        _cache.setdefault(key, blocks)
+    _persisted_loaded = True
+
+
+def _persist(key: str, blocks: Tuple[int, int]) -> None:
+    path = _user_cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        table = _load_table(path)
+        table[key] = blocks
+        with open(path, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(table.items())}, f, indent=1)
+    except OSError:
+        pass  # read-only filesystem: in-process cache still holds the winner
+
+
+def clear_cache() -> None:
+    """Drop in-process state (tests; does not touch persisted files)."""
+    global _persisted_loaded
+    _cache.clear()
+    _persisted_loaded = False
+
+
+# ---------------------------------------------------------------------------
+# candidates + heuristic
+# ---------------------------------------------------------------------------
+
+
+def _valid_bk(c: int, k: int, g: int) -> bool:
+    return k % c == 0 and (c % g == 0 or g % c == 0)
+
+
+def candidate_blocks(k: int, o: int, g: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Valid (block_k, block_o) candidate axes for a padded (k, o, g)."""
+    bks = tuple(c for c in _CANDIDATE_K if _valid_bk(c, k, g))
+    if not bks:
+        # irregular group size (e.g. g=96): fall back to g-aligned blocks
+        bks = tuple(m * g for m in (8, 4, 2, 1) if m * g <= k and k % (m * g) == 0)
+    bos = tuple(c for c in _CANDIDATE_O if o % c == 0)
+    return bks, bos
+
+
+def heuristic_blocks(k: int, o: int, g: int) -> Tuple[int, int]:
+    """The pre-autotuner choice: largest preference-ordered dividing block."""
+    bk = next((c for c in _PICK_ORDER if k % c == 0 and _valid_bk(c, k, g)), 0)
+    if not bk:
+        bks, _ = candidate_blocks(k, o, g)
+        bk = bks[0] if bks else 0
+    bo = next((c for c in _PICK_ORDER if o % c == 0), 0)
+    return bk, bo
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _time_once(fn, *args) -> float:
+    out = fn(*args)  # warmup: compile/trace
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(
+    B: int, k: int, o: int, q: int, g: int, impl: str, interpret: bool
+) -> Optional[Tuple[int, int]]:
+    """Sweep the candidate grid on synthetic inputs; return the fastest pair.
+
+    INVARIANT: the swept inputs are freshly-created *concrete* arrays (never
+    the caller's, which may be tracers — get_blocks runs inside jit traces of
+    the model). Concrete inputs keep the sweep executing eagerly on device at
+    trace time: real wall-clock timings, nothing staged into the outer jaxpr
+    (verified: outer computation stays at its 3-eqn dispatch regardless of
+    sweep size). Do not thread caller arrays into here.
+    """
+    from repro.kernels.bcq_mm import bcq_mm
+    from repro.kernels.lutgemm import lutgemm
+
+    bks, bos = candidate_blocks(k, o, g)
+    if not bks or not bos:
+        return None
+    # keep the sweep bounded: the 3 largest of each axis cover the useful range
+    bks, bos = bks[:3], bos[:3]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((B, k)), jnp.float32)
+    packed = jnp.asarray(rng.integers(0, 256, (q, k // 8, o)), jnp.uint8)
+    scales = jnp.asarray(rng.standard_normal((q, k // g, o)), jnp.float32)
+    fn = {"bcq_mm": bcq_mm, "lutgemm": lutgemm}[impl]
+
+    best, best_t = None, float("inf")
+    for bk in bks:
+        for bo in bos:
+            try:
+                t = _time_once(
+                    functools.partial(
+                        fn, g=g, block_k=bk, block_o=bo, interpret=interpret
+                    ),
+                    x,
+                    packed,
+                    scales,
+                )
+            except Exception:
+                continue  # candidate doesn't compile/fit — skip it
+            if t < best_t:
+                best, best_t = (bk, bo), t
+    return best
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def get_blocks(
+    *,
+    B: int,
+    k: int,
+    o: int,
+    q: int,
+    g: int,
+    impl: str,
+    interpret: bool,
+    allow_measure: Optional[bool] = None,
+) -> Tuple[int, int]:
+    """Best known (block_k, block_o) for a padded kernel shape.
+
+    Never raises on unknown shapes: resolution falls through cache → tables →
+    measurement (when enabled) → the legacy heuristic. Returns ``(0, 0)`` only
+    when no valid tiling exists at all (caller decides how to pad or fail).
+    """
+    _ensure_persisted_loaded()
+    backend = backend_tag(interpret)
+    key = make_key(B, k, o, q, g, impl, backend)
+    hit = _cache.get(key)
+    if hit is not None and _valid_bk(hit[0], k, g) and o % hit[1] == 0:
+        return hit
+
+    if allow_measure is None:
+        allow_measure = measurement_enabled()
+    if allow_measure:
+        measured = _measure(B, k, o, q, g, impl, interpret)
+        if measured is not None:
+            _cache[key] = measured
+            _persist(key, measured)
+            return measured
+
+    blocks = heuristic_blocks(k, o, g)
+    if blocks[0] and blocks[1]:
+        _cache[key] = blocks  # memoise so the divisibility scan runs once
+    return blocks

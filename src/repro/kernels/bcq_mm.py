@@ -11,9 +11,14 @@ replaces *bit-level arithmetic* that GPUs do poorly; TPUs unpack bits for free
 on the VPU while a per-byte LUT *gather* is the expensive part. Both are
 implemented (see ``lutgemm.py``) and compared in benchmarks.
 
-Grid: ``(o_blocks, k_blocks)`` with k fastest; the output block is revisited
-across k steps and accumulated in place (TPU sequential-grid semantics — the
-deterministic replacement for the paper's atomicAdd).
+Grid: ``(o_blocks, k_blocks)`` with k fastest. Partial sums live in a float32
+VMEM ``scratch_shapes`` accumulator that persists across the sequential k
+steps; the HBM output block is written exactly once, on the last k step
+(DESIGN.md §2 — the deterministic replacement for the paper's atomicAdd,
+without the ``out_ref`` read-modify-write HBM round-trip per k step that the
+first version paid). The o dimension is declared ``parallel`` so Mosaic may
+split output blocks across cores; k is ``arbitrary`` (sequential, carries the
+accumulator).
 """
 
 from __future__ import annotations
@@ -23,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 256
@@ -38,13 +44,14 @@ def _unpack_block(packed: jax.Array, compute_dtype) -> jax.Array:
 
 
 def _bcq_mm_kernel(
-    x_ref, packed_ref, scales_ref, out_ref, *, g: int, bk: int, compute_dtype
+    x_ref, packed_ref, scales_ref, out_ref, acc_ref, *, g: int, bk: int, compute_dtype
 ):
     ik = pl.program_id(1)
+    nk = pl.num_programs(1)
 
     @pl.when(ik == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     signs = _unpack_block(packed_ref[...], compute_dtype)  # (q, bk, bo)
     scales = scales_ref[...].astype(compute_dtype)  # (q, bk//g or 1, bo)
@@ -59,37 +66,39 @@ def _bcq_mm_kernel(
         w_eff = (signs * scales).sum(0)
 
     x = x_ref[...].astype(compute_dtype)
-    out_ref[...] += jnp.dot(x, w_eff, preferred_element_type=out_ref.dtype)
+    acc_ref[...] += jnp.dot(x, w_eff, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("g", "block_k", "block_o", "interpret", "compute_dtype")
-)
-def bcq_mm(
+def _validate_tiling(k, o, kc, g, block_k, block_o, mu=8):
+    """Shared tiling constraints for the BCQ Pallas kernels."""
+    if kc * mu != k:
+        raise ValueError(f"packed k dim {kc}*{mu} != x k dim {k}")
+    if k % block_k or o % block_o:
+        raise ValueError(f"(k={k}, o={o}) must be divisible by ({block_k}, {block_o})")
+    if g % mu or not (block_k % g == 0 or g % block_k == 0):
+        raise ValueError(f"g={g} incompatible with block_k={block_k}")
+
+
+def bcq_mm_call(
     x: jax.Array,
     packed: jax.Array,
     scales: jax.Array,
     *,
     g: int,
-    block_k: int = DEFAULT_BLOCK_K,
-    block_o: int = DEFAULT_BLOCK_O,
-    interpret: bool = False,
+    block_k: int,
+    block_o: int,
+    interpret: bool,
     compute_dtype=jnp.float32,
 ) -> jax.Array:
-    """x (B, k) @ BCQ[(q, k/8, o) packed, (q, k/g, o) scales] → (B, o) f32.
-
-    Constraints (enforced): k % block_k == 0, o % block_o == 0, g % 8 == 0 and
-    (block_k % g == 0 or g % block_k == 0). ``ops.quantized_matmul`` pads inputs
-    so callers never see these.
-    """
+    """Unjitted pallas_call core, shared with the fused multi-projection
+    wrapper (``bcq_mm_fused.py``) so both dispatch the identical kernel."""
     B, k = x.shape
     q, kc, o = packed.shape
-    if kc * 8 != k:
-        raise ValueError(f"packed k dim {kc}*8 != x k dim {k}")
-    if k % block_k or o % block_o:
-        raise ValueError(f"(k={k}, o={o}) must be divisible by ({block_k}, {block_o})")
-    if g % 8 or not (block_k % g == 0 or g % block_k == 0):
-        raise ValueError(f"g={g} incompatible with block_k={block_k}")
+    _validate_tiling(k, o, kc, g, block_k, block_o)
 
     grid = (o // block_o, k // block_k)
     if g <= block_k:
@@ -114,5 +123,41 @@ def bcq_mm(
         ],
         out_specs=pl.BlockSpec((B, block_o), lambda io, ik: (0, io)),
         out_shape=jax.ShapeDtypeStruct((B, o), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((B, block_o), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
         interpret=interpret,
     )(x, packed, scales)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "block_k", "block_o", "interpret", "compute_dtype")
+)
+def bcq_mm(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    g: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_o: int = DEFAULT_BLOCK_O,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """x (B, k) @ BCQ[(q, k/8, o) packed, (q, k/g, o) scales] → (B, o) f32.
+
+    Constraints (enforced): k % block_k == 0, o % block_o == 0, g % 8 == 0 and
+    (block_k % g == 0 or g % block_k == 0). ``ops.quantized_matmul`` pads inputs
+    so callers never see these.
+    """
+    return bcq_mm_call(
+        x,
+        packed,
+        scales,
+        g=g,
+        block_k=block_k,
+        block_o=block_o,
+        interpret=interpret,
+        compute_dtype=compute_dtype,
+    )

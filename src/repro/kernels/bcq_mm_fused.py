@@ -1,0 +1,81 @@
+"""Fused multi-projection BCQ matmul — QKV / gate-up in one kernel pass.
+
+Decode is memory-bound: at batch 1 every projection of the same input reads
+its packed weights once, but a *separate* kernel launch per projection also
+re-streams the activation block HBM→VMEM per launch and pays per-launch grid
+overhead N times. FLUTE (Guo et al., 2024) showed LUT/quantized kernels live
+or die on tiling + fused multi-output layout; this module is that lesson for
+the TPU mapping (DESIGN.md §2.3):
+
+- the N projections' packed weights and group scales are **concatenated along
+  the output dim ahead of time** (``fuse_tensors`` — a one-time weight-prep
+  step, not a per-step copy), so they must share ``(k, q, g)`` — true for
+  Q/K/V (same ``d_model`` input, same quant policy) and for gate/up;
+- ONE ``pallas_call`` sweeps the union of output blocks: the activation block
+  is loaded once per (o-block, k-block) grid cell of a single kernel instead
+  of once per projection, the float32 VMEM scratch accumulator is shared, and
+  there is a single dispatch;
+- the kernel body is ``bcq_mm``'s (identical unpack→scale→MXU data path), so
+  parity tests on the plain kernel cover the fused one's inner loop;
+- outputs are returned as N slices of the fused ``(B, Σo_i)`` result — slicing
+  is free under XLA (views fused into consumers).
+
+``lutgemm`` dispatch reuses the same fused layout via ``ops.quantized_matmul_fused``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bcq_mm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_O, bcq_mm_call
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("g", "out_dims", "block_k", "block_o", "interpret", "compute_dtype"),
+)
+def bcq_mm_fused(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    g: int,
+    out_dims: Tuple[int, ...],
+    block_k: int = DEFAULT_BLOCK_K,
+    block_o: int = DEFAULT_BLOCK_O,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+) -> Tuple[jax.Array, ...]:
+    """``x (B, k)`` against N fused projections → N ``(B, o_i)`` f32 outputs.
+
+    ``packed (q, k/8, Σo_i)`` / ``scales (q, k/g, Σo_i)`` hold the projections
+    concatenated along the output dim (see :func:`repro.core.fuse_tensors`).
+    Tiling constraints are those of :func:`repro.kernels.bcq_mm.bcq_mm` on the
+    fused output dim; the per-projection split offsets are unconstrained.
+    """
+    o = packed.shape[-1]
+    if sum(out_dims) != o:
+        raise ValueError(f"out_dims {out_dims} do not sum to fused o={o}")
+    y = bcq_mm_call(
+        x,
+        packed,
+        scales,
+        g=g,
+        block_k=block_k,
+        block_o=block_o,
+        interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+    return _split(y, out_dims)
+
+
+def _split(y: jax.Array, out_dims: Sequence[int]) -> Tuple[jax.Array, ...]:
+    outs, start = [], 0
+    for d in out_dims:
+        outs.append(y[..., start : start + d])
+        start += d
+    return tuple(outs)

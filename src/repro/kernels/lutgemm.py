@@ -15,8 +15,11 @@ Per k-block of the reduction dimension:
    benchmark comparison and DESIGN.md §2.
 3. **Scale & accumulate** — partial sums are reduced over ``g/8`` byte-chunks
    per scale group, multiplied by the group scales, summed over the q bit
-   planes, and accumulated into the revisited output block (deterministic
-   stand-in for the paper's atomicAdd).
+   planes, and accumulated into a float32 VMEM scratch accumulator that lives
+   across the sequential k steps (deterministic stand-in for the paper's
+   atomicAdd); the HBM output block is written once, on the last k step
+   (DESIGN.md §2). The o grid dimension is declared ``parallel``, k
+   ``arbitrary``.
 """
 
 from __future__ import annotations
@@ -26,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 128
@@ -39,12 +43,13 @@ def _sign_patterns(dtype) -> jax.Array:
     return (2 * ((keys >> shifts) & 1) - 1).astype(dtype)
 
 
-def _lutgemm_kernel(x_ref, packed_ref, scales_ref, out_ref, *, g: int, bk: int):
+def _lutgemm_kernel(x_ref, packed_ref, scales_ref, out_ref, acc_ref, *, g: int, bk: int):
     ik = pl.program_id(1)
+    nk = pl.num_programs(1)
 
     @pl.when(ik == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     B = x_ref.shape[0]
     C = bk // MU  # byte-chunks in this k-block
@@ -73,7 +78,11 @@ def _lutgemm_kernel(x_ref, packed_ref, scales_ref, out_ref, *, g: int, bk: int):
         acc = jnp.einsum("bqGo,qGo->bo", grouped, scales)
     else:
         acc = jnp.einsum("bqco,qo->bo", partial, scales[:, 0, :])
-    out_ref[...] += acc.astype(out_ref.dtype)
+    acc_ref[...] += acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("g", "block_k", "block_o", "interpret"))
@@ -122,5 +131,9 @@ def lutgemm(
         ],
         out_specs=pl.BlockSpec((B, block_o), lambda io, ik: (0, io)),
         out_shape=jax.ShapeDtypeStruct((B, o), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((B, block_o), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
         interpret=interpret,
     )(x, packed, scales)

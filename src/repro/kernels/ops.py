@@ -10,83 +10,72 @@
 - ``impl="lutgemm"``  paper-faithful LUT kernel.
 - ``impl="auto"``     bcq_mm on TPU backends, ref elsewhere.
 
-The wrapper normalises leading batch dims, pads B to the sublane width and the
-output dim to the lane-block width, and slices the result back, so callers are
+``quantized_matmul_fused`` is the decode fast path: N projections of the same
+activation (QKV, gate-up) whose packed weights were concatenated along the
+output dim at weight-prep time (``repro.core.fuse_tensors``) run as ONE kernel
+pass and return N outputs — one dispatch, one activation stream (DESIGN.md
+§2.3).
+
+Block sizes come from :mod:`repro.kernels.autotune` — measured winners per
+``(B, k, o, q, g, impl, backend)`` with a JSON-persisted table and the old
+hardcoded preference order as the safe fallback (``REPRO_AUTOTUNE=0`` opts out
+of measurement).
+
+The wrappers normalise leading batch dims, pad B to the sublane width and the
+output dim to the lane-block width, and slice the result back, so callers are
 shape-agnostic.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import QuantizedTensor
+from repro.kernels import autotune
 from repro.kernels.bcq_mm import bcq_mm as _bcq_mm
+from repro.kernels.bcq_mm_fused import _split
 from repro.kernels.lutgemm import lutgemm as _lutgemm
 from repro.kernels.ref import bcq_mm_ref as _bcq_mm_ref
 
 _SUBLANE = 8
+_LANE = 128
 
 
-def _pick_block(dim: int, candidates=(512, 256, 128, 64)) -> int:
-    for c in candidates:
-        if dim % c == 0:
-            return c
-    return 0  # caller pads
-
-
-def quantized_matmul(
-    x: jax.Array,
-    qt: QuantizedTensor,
-    *,
-    impl: str = "auto",
-    interpret: Optional[bool] = None,
-    out_dtype=None,
-) -> jax.Array:
-    """``x (..., k) @ qt (k, o)`` → ``(..., o)``."""
+def _resolve(impl: str, interpret: Optional[bool]) -> Tuple[str, bool]:
     if impl == "auto":
         impl = "bcq_mm" if jax.default_backend() == "tpu" else "ref"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    out_dtype = out_dtype or x.dtype
+    return impl, interpret
 
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    if k != qt.k:
-        raise ValueError(f"x reduction dim {k} != weight k {qt.k}")
-    xb = x.reshape(-1, k)
+
+def _pad_o(packed, scales, o: int):
+    """Pad the output dim to the lane block when no candidate divides it."""
+    if any(o % c == 0 for c in autotune._CANDIDATE_O):
+        return packed, scales, o
+    pad = -o % _LANE
+    packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad)))
+    scales = jnp.pad(scales, ((0, 0), (0, 0), (0, pad)))
+    return packed, scales, o + pad
+
+
+def _pallas_mm(xb, qt: QuantizedTensor, impl: str, interpret: bool) -> jax.Array:
+    """Padded (B, k) @ qt → (B, o_padded) f32 through the chosen Pallas kernel."""
+    packed, scales, o = _pad_o(qt.packed, qt.scales, qt.o)
     B = xb.shape[0]
-
-    if impl == "ref":
-        # materialise the reconstruction in x's dtype: bf16 activations get a
-        # bf16 dequant (serving path); f32 activations keep the f32 oracle
-        w = qt.dequantize(dtype=x.dtype)
-        y = jnp.dot(xb, w, preferred_element_type=jnp.float32)
-        return y.reshape(*lead, qt.o).astype(out_dtype)
-
-    # --- Pallas paths: pad B to sublane, o to a lane block ---
-    block_k = _pick_block(qt.k)
-    if block_k == 0:
-        raise ValueError(f"k={qt.k} must be divisible by 64 for the Pallas path")
-    packed, scales, o = qt.packed, qt.scales, qt.o
-    block_o = _pick_block(o)
-    if block_o == 0:
-        block_o = 128
-        pad_o = -o % block_o
-        packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad_o)))
-        scales = jnp.pad(scales, ((0, 0), (0, 0), (0, pad_o)))
-        o = o + pad_o
     pad_b = -B % _SUBLANE
     if pad_b:
         xb = jnp.pad(xb, ((0, pad_b), (0, 0)))
-    # a scale group must not be finer than the k-block constraint allows
-    if qt.g <= block_k and block_k % qt.g:
-        block_k = qt.g if qt.g in (64, 128, 256, 512) else _pick_block(qt.k, (qt.g,))
-        if not block_k:
-            raise ValueError(f"g={qt.g} incompatible with k={qt.k} Pallas tiling")
-
+    block_k, block_o = autotune.get_blocks(
+        B=xb.shape[0], k=qt.k, o=o, q=qt.q, g=qt.g, impl=impl, interpret=interpret
+    )
+    if not block_k:
+        raise ValueError(f"k={qt.k} has no valid Pallas tiling (g={qt.g})")
+    if not block_o:
+        raise ValueError(f"o={o} has no valid Pallas tiling")
     fn = {"bcq_mm": _bcq_mm, "lutgemm": _lutgemm}[impl]
     y = fn(
         xb,
@@ -97,8 +86,64 @@ def quantized_matmul(
         block_o=block_o,
         interpret=interpret,
     )
-    y = y[:B, : qt.o]
-    return y.reshape(*lead, qt.o).astype(out_dtype)
+    return y[:B]
+
+
+def quantized_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """``x (..., k) @ qt (k, o)`` → ``(..., o)`` (the single-projection case
+    of :func:`quantized_matmul_fused`)."""
+    (y,) = quantized_matmul_fused(
+        x, qt, (qt.o,), impl=impl, interpret=interpret, out_dtype=out_dtype
+    )
+    return y
+
+
+def quantized_matmul_fused(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    out_dims: Sequence[int],
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> Tuple[jax.Array, ...]:
+    """``x (..., k)`` against N fused projections → N ``(..., o_i)`` outputs.
+
+    ``qt`` holds the projections concatenated along the output dim
+    (:func:`repro.core.fuse_tensors`); ``sum(out_dims) == qt.o``. One kernel
+    dispatch serves all N projections — the decode fast path for QKV and
+    gate-up (DESIGN.md §2.3).
+    """
+    out_dims = tuple(out_dims)
+    if sum(out_dims) != qt.o:
+        raise ValueError(f"out_dims {out_dims} do not sum to fused o={qt.o}")
+    impl, interpret = _resolve(impl, interpret)
+    out_dtype = out_dtype or x.dtype
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if k != qt.k:
+        raise ValueError(f"x reduction dim {k} != weight k {qt.k}")
+    xb = x.reshape(-1, k)
+
+    if impl == "ref":
+        # materialise the reconstruction in x's dtype: bf16 activations get a
+        # bf16 dequant (serving path); f32 activations keep the f32 oracle
+        w = qt.dequantize(dtype=x.dtype)
+        y = jnp.dot(xb, w, preferred_element_type=jnp.float32)
+    else:
+        y = _pallas_mm(xb, qt, impl, interpret)[:, : qt.o]
+    return tuple(
+        part.reshape(*lead, d).astype(out_dtype)
+        for part, d in zip(_split(y, out_dims), out_dims)
+    )
 
 
 def linear(
@@ -124,3 +169,26 @@ def linear(
     if b is not None:
         y = y + b.astype(out_dtype)
     return y
+
+
+def linear_fused(
+    x: jax.Array,
+    w,
+    out_dims: Sequence[int],
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> Tuple[jax.Array, ...]:
+    """N projections of one activation from output-fused weights.
+
+    ``w`` is a fused QuantizedTensor (one kernel pass) or a dense
+    ``(k, sum(out_dims))`` array (one XLA matmul) — either way the activation
+    is read once for all N projections.
+    """
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, QuantizedTensor):
+        return quantized_matmul_fused(x, w, out_dims, impl=impl, out_dtype=out_dtype)
+    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
+        out_dtype
+    )
+    return _split(y, tuple(out_dims))

@@ -1,6 +1,11 @@
 """Serving launcher: quantize + batched generation (paper Fig. 13 pipeline).
 
 PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 128
+
+Decode runs the scanned fast path by default (``Engine.generate(scan=True)``:
+one ``lax.scan`` dispatch for all generated tokens, on-device sampling, fused
+QKV/gate-up projection kernels — DESIGN.md §2.3/§3). ``--no-scan`` forces the
+per-token step loop, e.g. to measure the dispatch overhead it removes.
 """
 
 from __future__ import annotations
@@ -26,6 +31,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--no-scan", action="store_true",
+                    help="per-token step loop instead of the scanned decode")
     args = ap.parse_args()
 
     # reduced config sized so quantization actually bites (>=128-dim linears)
@@ -45,11 +52,13 @@ def main() -> None:
     prompts = corpus.sample(args.batch, args.prompt_len, seed=7)
     prompts = prompts[:, : args.prompt_len].astype(np.int32)
     eng = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8)
+    del params  # the engine holds the fused layout; free the unfused tree
     t0 = time.perf_counter()
-    res = eng.generate(prompts, args.gen)
+    res = eng.generate(prompts, args.gen, scan=not args.no_scan)
     dt = time.perf_counter() - t0
     toks = args.batch * args.gen
-    print(f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on this host)")
+    mode = "step-loop" if args.no_scan else "scanned"
+    print(f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on this host, {mode} decode)")
     print("sample:", res.tokens[0, args.prompt_len :])
 
 

@@ -1,6 +1,7 @@
 """Decoder-model zoo: dense GQA / MoE / VLM / audio / RG-LRU hybrid / xLSTM."""
 
 from repro.models.config import SHAPES, ModelConfig, ShapeConfig, reduced
+from repro.models.fuse import fuse_decode_projections
 from repro.models.model import forward, init_cache, init_params
 
 __all__ = [
@@ -8,6 +9,7 @@ __all__ = [
     "ModelConfig",
     "ShapeConfig",
     "forward",
+    "fuse_decode_projections",
     "init_cache",
     "init_params",
     "reduced",

@@ -1,0 +1,94 @@
+"""Decode weight-prep: fuse per-block QKV and gate/up projections.
+
+One-time tree surgery applied by the serving engine (``Engine(fuse=True)``,
+the default): for every self-attention block the three ``wq``/``wk``/``wv``
+leaves are replaced by one output-concatenated ``wqkv`` leaf, and every plain
+SwiGLU MLP's ``w_gate``/``w_up`` pair by ``w_gate_up``. ``models.layers``
+detects the fused keys and issues ONE projection kernel pass (packed BCQ:
+:func:`repro.kernels.bcq_mm_fused.bcq_mm_fused`; dense: one XLA matmul) per
+activation instead of N — the decode fast path of DESIGN.md §2.3.
+
+Rules:
+- cross-attention blocks keep ``wk``/``wv`` unfused (they project the image
+  memory, not the token stream, so there is no shared activation to fuse);
+- QuantizedTensor leaves fuse only when ``(k, q, g)`` and scale dtype agree
+  (always true under a per-sublayer-type :class:`QuantPolicy`); mismatches
+  and mixed dense/quantized triples are left untouched — the unfused layer
+  path still works;
+- MoE expert banks keep their own routing path (``router`` present → skipped);
+- the fused tree's total parameter bytes equal the unfused tree's, so
+  ``quantized_bytes`` reporting is stable across fusion. NOTE:
+  ``jnp.concatenate`` materialises new buffers — the unfused projections are
+  only freed once the caller drops its reference to the input tree (the
+  serving launcher rebinds; keep both alive only if you need both layouts).
+
+Training params are never fused: ``init_params`` emits the unfused layout and
+checkpoints stay in it — fusion is a serving-time view, re-derived per engine.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.qtensor import QuantizedTensor, fuse_tensors
+from repro.models.config import ModelConfig
+
+_FUSABLE_ATTN = ("attn", "attn_moe", "local_attn")
+
+
+def _fuse_leaves(leaves: Sequence) -> Optional[object]:
+    """Fuse N projection leaves along the output dim, or None if not fusable."""
+    if any(leaf is None for leaf in leaves):
+        return None
+    if all(isinstance(leaf, QuantizedTensor) for leaf in leaves):
+        try:
+            return fuse_tensors(leaves)
+        except ValueError:
+            return None
+    if any(isinstance(leaf, QuantizedTensor) for leaf in leaves):
+        return None  # mixed dense/quantized: no shared kernel to fuse into
+    shapes = {leaf.shape[:-1] for leaf in leaves}
+    dtypes = {leaf.dtype for leaf in leaves}
+    if len(shapes) != 1 or len(dtypes) != 1:
+        return None
+    return jnp.concatenate(list(leaves), axis=-1)
+
+
+def _fuse_attn(attn: dict) -> dict:
+    fused = _fuse_leaves([attn.get("wq"), attn.get("wk"), attn.get("wv")])
+    if fused is None:
+        return attn
+    out = {k: v for k, v in attn.items() if k not in ("wq", "wk", "wv")}
+    out["wqkv"] = fused
+    return out
+
+
+def _fuse_mlp(mlp: dict) -> dict:
+    if "router" in mlp or "w_gate" not in mlp or "w_up" not in mlp:
+        return mlp
+    fused = _fuse_leaves([mlp["w_gate"], mlp["w_up"]])
+    if fused is None:
+        return mlp
+    out = {k: v for k, v in mlp.items() if k not in ("w_gate", "w_up")}
+    out["w_gate_up"] = fused
+    return out
+
+
+def fuse_decode_projections(cfg: ModelConfig, params: dict) -> dict:
+    """Return a params tree with QKV / gate-up leaves output-fused for decode."""
+    stages = []
+    for si, (pattern, _) in enumerate(cfg.stages):
+        stage_p = dict(params["stages"][si])
+        for bi, btype in enumerate(pattern):
+            bp = dict(stage_p[f"b{bi}"])
+            if btype in _FUSABLE_ATTN and "attn" in bp:
+                bp["attn"] = _fuse_attn(bp["attn"])
+            if "mlp" in bp and isinstance(bp["mlp"], dict):
+                bp["mlp"] = _fuse_mlp(bp["mlp"])
+            stage_p[f"b{bi}"] = bp
+        stages.append(stage_p)
+    out = dict(params)
+    out["stages"] = tuple(stages)
+    return out

@@ -12,7 +12,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import linear
+from repro.core.qtensor import QuantizedTensor
+from repro.kernels.ops import linear, linear_fused
 from repro.models.config import ModelConfig
 from repro.parallel.ctx import constrain_decode_q, constrain_qkv
 
@@ -229,17 +230,25 @@ def attention(
     """
     b, s, _ = x.shape
     n_rep = cfg.n_heads // cfg.n_kv_heads
-    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
-    q = rope(q, positions, cfg.rope_theta)
+    if "wqkv" in p:
+        # decode fast path: output-fused QKV weights (models.fuse) — one kernel
+        # pass / one activation read for all three projections (DESIGN.md §2.3)
+        q, k, v = linear_fused(x, p["wqkv"], (cfg.q_dim, cfg.kv_dim, cfg.kv_dim))
+    else:
+        q = linear(x, p["wq"])
+        k = v = None
+    q = rope(q.reshape(b, s, cfg.n_heads, cfg.d_head), positions, cfg.rope_theta)
 
     if kv_override is not None:
         k_mem, v_mem = kv_override
         out = _sdpa(q, k_mem, v_mem, None)
         return linear(out.reshape(b, s, cfg.q_dim), p["wo"]), cache
 
-    k = linear(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
-    v = linear(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
-    k = rope(k, positions, cfg.rope_theta)
+    if k is None:
+        k = linear(x, p["wk"])
+        v = linear(x, p["wv"])
+    k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.d_head), positions, cfg.rope_theta)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
 
     def _causal(qq, kk, vv):
         qq, kk, vv = constrain_qkv(qq, kk, vv)
@@ -369,6 +378,12 @@ def _ring_positions(slot: Array, total: Array, s_max: int) -> Array:
 
 
 def mlp_swiglu(p: dict, x: Array) -> Array:
-    gate = jax.nn.silu(linear(x, p["w_gate"]))
-    up = linear(x, p["w_up"])
-    return linear(gate * up, p["w_down"])
+    if "w_gate_up" in p:
+        # decode fast path: output-fused gate/up weights (models.fuse)
+        w = p["w_gate_up"]
+        d_ff = (w.o if isinstance(w, QuantizedTensor) else w.shape[-1]) // 2
+        gate, up = linear_fused(x, w, (d_ff, d_ff))
+    else:
+        gate = linear(x, p["w_gate"])
+        up = linear(x, p["w_up"])
+    return linear(jax.nn.silu(gate) * up, p["w_down"])

@@ -5,3 +5,13 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune(tmp_path, monkeypatch):
+    """Keep the suite deterministic and off the user's real autotune cache:
+    no live timing sweeps (REPRO_AUTOTUNE=0 → table/heuristic blocks), and any
+    persistence goes to a per-test tmp file. Tests that exercise measurement
+    re-enable it explicitly (see test_decode_path.tuner)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune_cache.json"))

@@ -3,8 +3,16 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# hypothesis is an optional test extra (see pyproject [test]); the property
+# tests below importorskip it per-test so the rest of the module always runs
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     bcq_error,
@@ -93,26 +101,17 @@ def test_bad_args(rng):
         quantize_bcq_greedy(w, q=2, g=48)  # g does not divide k
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    kc=st.integers(1, 8),
-    o=st.integers(1, 40),
-    q=st.integers(1, 4),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_pack_unpack_roundtrip(kc, o, q, seed):
+# property bodies shared by the hypothesis sweep and the deterministic
+# fallback (minimal installs), so the two branches cannot drift
+
+
+def _check_pack_unpack_roundtrip(kc, o, q, seed):
     r = np.random.default_rng(seed)
     binary = jnp.asarray(r.choice([-1, 1], size=(q, kc * 8, o)), jnp.int8)
     assert (unpack_signs(pack_signs(binary)) == binary).all()
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    g_exp=st.integers(3, 6),
-    q=st.integers(1, 4),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_dequantize_reconstruction_error_bounded(g_exp, q, seed):
+def _check_reconstruction_error_bounded(g_exp, q, seed):
     """Property: relative error is always in [0, 1] and greedy error shrinks
     monotonically in q for the SAME matrix (residual property)."""
     r = np.random.default_rng(seed)
@@ -124,6 +123,38 @@ def test_dequantize_reconstruction_error_bounded(g_exp, q, seed):
     if q > 1:
         s2, b2 = quantize_bcq_greedy(w, q=q - 1, g=g)
         assert err <= float(bcq_error(w, s2, b2, g)) + 1e-6
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        kc=st.integers(1, 8),
+        o=st.integers(1, 40),
+        q=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pack_unpack_roundtrip(kc, o, q, seed):
+        _check_pack_unpack_roundtrip(kc, o, q, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        g_exp=st.integers(3, 6),
+        q=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_dequantize_reconstruction_error_bounded(g_exp, q, seed):
+        _check_reconstruction_error_bounded(g_exp, q, seed)
+
+else:
+
+    @pytest.mark.parametrize("kc,o,q,seed", [(1, 1, 1, 0), (4, 17, 3, 1), (8, 40, 4, 2)])
+    def test_pack_unpack_roundtrip(kc, o, q, seed):
+        _check_pack_unpack_roundtrip(kc, o, q, seed)
+
+    @pytest.mark.parametrize("g_exp,q,seed", [(3, 1, 0), (4, 2, 1), (6, 4, 2)])
+    def test_dequantize_reconstruction_error_bounded(g_exp, q, seed):
+        _check_reconstruction_error_bounded(g_exp, q, seed)
 
 
 def test_compression_ratio_eq3():
