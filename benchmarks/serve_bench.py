@@ -1,0 +1,154 @@
+"""Serving-throughput benchmark: continuous batching vs one-shot generate.
+
+Measures the ISSUE 2 acceptance number: at >=4 concurrent requests the
+continuous-batching scheduler must sustain higher tokens/sec than serving the
+same workload as sequential one-shot scanned ``Engine.generate`` calls (the
+PR 1 fast path). Two arrival regimes:
+
+- ``burst``  — all requests queued at t=0 (pure throughput / makespan);
+- ``poisson``— Poisson arrivals at ~2x the sequential service rate, the
+  regime the paper's serving workload (§V, OPT token generation) lives in:
+  the queue stays non-empty, so the win is batch-feeding, not queueing tricks.
+
+Both paths are warmed first so XLA compiles (per prompt-length/budget shape)
+stay out of the timings. CPU-host numbers are functional sanity, not TPU
+claims (benchmarks/common.py).
+
+PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.infer import Engine, Scheduler
+from repro.launch.serve import (
+    build_requests,
+    drive_continuous,
+    drive_sequential,
+    poisson_arrivals,
+)
+from repro.models import init_params, reduced
+from repro.quant import QuantPolicy, quantize_params
+
+N_REQUESTS = 12
+PROMPT_LEN = 16
+GEN = 24
+SLOTS = (4, 8)
+CHUNK = 8
+
+
+def _engine():
+    cfg = reduced(get_config("llama3.2-3b"), d_model=256, n_kv_heads=4, d_ff=512)
+    params = quantize_params(
+        init_params(jax.random.PRNGKey(0), cfg), QuantPolicy(q=4, g=128, iters=4)
+    )
+    return cfg, Engine(cfg, params, max_seq=PROMPT_LEN + GEN + 8)
+
+
+def _warmup(cfg, engine):
+    """Compile every shape both paths will hit: the (PROMPT_LEN, GEN) scan
+    generate, the batch-1 prefill, the admit install, and one decode chunk
+    per slot width."""
+    reqs = build_requests(cfg, 2, PROMPT_LEN, GEN)
+    engine.generate(reqs[0].prompt[None], GEN, temperature=1.0, seed=0)
+    engine.generate(reqs[0].prompt[None], GEN, temperature=0.0, seed=0)
+    for n_slots in SLOTS:
+        sched = Scheduler(engine, n_slots=n_slots, chunk=CHUNK)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json"),
+    )
+    args = ap.parse_args()
+
+    cfg, engine = _engine()
+    t0 = time.perf_counter()
+    _warmup(cfg, engine)
+    print(f"warmup (compiles): {time.perf_counter() - t0:.1f}s")
+
+    reqs = build_requests(cfg, N_REQUESTS, PROMPT_LEN, GEN)
+    total_new = sum(r.max_new_tokens for r in reqs)
+    rows = []
+
+    def record(name, makespan, extra=""):
+        tps = total_new / makespan
+        rows.append(
+            {
+                "name": name,
+                "tokens_per_s": round(tps, 2),
+                "makespan_s": round(makespan, 3),
+                "derived": f"requests={N_REQUESTS};prompt={PROMPT_LEN};gen={GEN};"
+                f"q=4;g=128{extra}",
+            }
+        )
+        print(f"{name}: {tps:.1f} tok/s (makespan {makespan:.2f}s)")
+        return tps
+
+    # -- burst regime: everything queued at t=0 ------------------------------
+    zeros = np.zeros(N_REQUESTS)
+    _, seq_dt = drive_sequential(engine, reqs, zeros)
+    seq_tps = record("serve/sequential_oneshot/burst", seq_dt)
+
+    cont_tps = {}
+    for n_slots in SLOTS:
+        sched, done, dt = drive_continuous(
+            engine, reqs, zeros, n_slots=n_slots, chunk=CHUNK
+        )
+        util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
+        cont_tps[n_slots] = record(
+            f"serve/continuous_slots{n_slots}/burst", dt,
+            extra=f";chunk={CHUNK};slot_util={util:.2f}",
+        )
+
+    # -- poisson regime: arrivals at ~2x the sequential service rate ---------
+    rate = 2.0 * N_REQUESTS / seq_dt
+    arrivals = poisson_arrivals(N_REQUESTS, rate, seed=1)
+    _, seq_p_dt = drive_sequential(engine, reqs, arrivals)
+    record(f"serve/sequential_oneshot/poisson_{rate:.1f}rps", seq_p_dt)
+    sched, done, dt = drive_continuous(
+        engine, reqs, arrivals, n_slots=4, chunk=CHUNK
+    )
+    util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
+    record(
+        f"serve/continuous_slots4/poisson_{rate:.1f}rps", dt,
+        extra=f";chunk={CHUNK};slot_util={util:.2f}",
+    )
+
+    speedup = cont_tps[4] / seq_tps
+    rows.append(
+        {
+            "name": "serve/speedup_continuous4_vs_sequential/burst",
+            "tokens_per_s": None,
+            "makespan_s": None,
+            "derived": f"speedup={speedup:.2f}x",
+        }
+    )
+    print(f"continuous(4 slots) vs sequential: {speedup:.2f}x")
+    assert speedup > 1.0, (
+        "acceptance: continuous batching must beat sequential one-shot "
+        f"generate at >=4 slots (got {speedup:.2f}x)"
+    )
+
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+        f.write("\n")
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,23 @@ This exercises the single-matmul building block. End-to-end generation goes
 through ``repro.infer.Engine``, whose decode runs as one on-device
 ``lax.scan`` by default (``generate(..., scan=True)``; pass ``scan=False``
 for the per-token step loop) with QKV/gate-up projections fused into single
-kernel passes — see DESIGN.md §2.3/§3 and ``repro.launch.serve``.
+kernel passes — see DESIGN.md §2.3/§3.
+
+Serving many concurrent requests goes through the continuous-batching
+scheduler (DESIGN.md §4) instead of one-shot ``generate``:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \\
+        --q 4 --g 128 --requests 12 --slots 4 --rate 8
+
+Requests are continuously batched into a ``--slots``-wide decode batch with
+per-request temperature/seed/budget; ``--sequential`` serves the same
+workload with one-shot ``generate`` calls for comparison (BENCH_serve.json),
+and ``--rate`` simulates Poisson arrivals. Programmatic use::
+
+    from repro.infer import Engine, Request, Scheduler
+    sched = Scheduler(Engine(cfg, params, max_seq=64), n_slots=4)
+    sched.submit(Request(prompt, max_new_tokens=16, temperature=0.7))
+    completions = sched.run()   # token-identical to solo generate()
 """
 
 import jax.numpy as jnp

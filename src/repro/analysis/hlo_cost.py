@@ -483,6 +483,29 @@ def attribute(hlo_text: str, top: int = 20) -> List[Tuple[float, float, str]]:
     return rows[:top]
 
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """Flatten ``compiled.cost_analysis()`` across JAX versions.
+
+    New JAX returns one flat ``{property: value}`` dict; older releases return
+    a *list* of per-executable-program dicts (one entry for an unpartitioned
+    module). Indexing the raw result with a string therefore TypeErrors on old
+    versions — every consumer goes through here first. Multiple program entries
+    are summed (properties are additive totals: flops, bytes accessed, ...).
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for entry in cost:
+            for k, v in dict(entry).items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    raise TypeError(f"unrecognised cost_analysis result type {type(cost)!r}")
+
+
 def analyze(hlo_text: str, entry: Optional[str] = None) -> Cost:
     """Full-module trip-count-aware cost. Entry = module's ENTRY computation."""
     comps = parse_module(hlo_text)

@@ -1,5 +1,7 @@
-"""Inference engine: prefill/decode split with quantized weights (paper Fig. 13)."""
+"""Inference engine: prefill/decode split with quantized weights (paper Fig. 13)
+plus the continuous-batching serving layer (slot-based scheduler)."""
 
 from repro.infer.engine import Engine
+from repro.infer.scheduler import Completion, Request, Scheduler
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "Scheduler", "Request", "Completion"]

@@ -81,6 +81,7 @@ class Engine:
         self.params = fuse_decode_projections(cfg, params) if fuse else params
         self.max_seq = max_seq
         self.embed_fn = embed_fn
+        self._unit_cache = None  # lazy batch-1 prefill template (admit_slot)
 
         def _prefill(params, tokens, image_emb, cache):
             kw = (
@@ -125,11 +126,184 @@ class Engine:
             )
             return toks.T, cache  # (B, n_steps)
 
+        def _admit(slots, slot, cache1, logits1, key, plen, max_new, temperature, greedy):
+            """Install a freshly prefilled request into batch row `slot`.
+
+            `cache1` is the batch-1 prefilled cache; every cache leaf is
+            (repeat, batch, ...) so the row write is one dynamic-update-slice
+            per leaf along axis 1. The slot's whole state row (KV rows,
+            recurrent state, position counter, PRNG key, sampling params) is
+            overwritten — nothing from the previous tenant survives, which is
+            the slot-reset contract (DESIGN.md §4).
+            """
+            cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                ),
+                slots["cache"],
+                cache1,
+            )
+            return {
+                "cache": cache,
+                "logits": slots["logits"].at[slot].set(logits1[0]),
+                "pos": slots["pos"].at[slot].set(plen),
+                "keys": slots["keys"].at[slot].set(key),
+                "active": slots["active"].at[slot].set(True),
+                "remaining": slots["remaining"].at[slot].set(max_new),
+                "temperature": slots["temperature"].at[slot].set(temperature),
+                "greedy": slots["greedy"].at[slot].set(greedy),
+            }
+
+        def _scan_decode_slots(params, slots, *, n_steps):
+            """`n_steps` slot-batched decode steps as ONE dispatch.
+
+            Like `_scan_decode`, but each batch row is an independent request
+            with its own position counter, PRNG key and sampling params, plus
+            an active mask: inactive rows keep their key/logits/position
+            frozen so a row's (key-split, sample) sequence advances exactly
+            once per emitted token — the same sequence a solo batch-1
+            `generate` of that request produces. Inactive rows still flow
+            through the batched forward (they decode garbage into their own
+            cache rows at a frozen position, which is harmless: a row's cache
+            beyond its position is never attended, and admission rewrites the
+            slot's state from scratch).
+
+            Per-row sampling matches batch-1 `_sample` bit-for-bit: the
+            categorical is taken over a (1, V) row under vmap, which JAX's
+            counter-based PRNG evaluates identically to a standalone call.
+            """
+            temperature, greedy = slots["temperature"], slots["greedy"]
+
+            def body(carry, _):
+                logits, cache, pos, keys, active, remaining = carry
+                splits = jax.vmap(jax.random.split)(keys)  # (B, 2, 2)
+                new_keys = jnp.where(active[:, None], splits[:, 0], keys)
+                sub = splits[:, 1]
+                sampled = jax.vmap(
+                    lambda lg, kk, t: jax.random.categorical(kk, lg[None] / t)[0]
+                )(logits, sub, temperature)
+                tok = jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+                tok = tok.astype(jnp.int32)
+                logits2, cache2 = _decode(params, tok[:, None], cache, pos)
+                new_logits = jnp.where(active[:, None], logits2[:, -1], logits)
+                new_pos = jnp.where(active, pos + 1, pos)
+                new_rem = jnp.where(active, remaining - 1, remaining)
+                new_active = active & (new_rem > 0)
+                emitted = jnp.where(active, tok, -1)
+                return (
+                    (new_logits, cache2, new_pos, new_keys, new_active, new_rem),
+                    (emitted, active),
+                )
+
+            carry = (
+                slots["logits"], slots["cache"], slots["pos"],
+                slots["keys"], slots["active"], slots["remaining"],
+            )
+            carry, (toks, actives) = jax.lax.scan(body, carry, None, length=n_steps)
+            logits, cache, pos, keys, active, remaining = carry
+            out = dict(
+                slots,
+                logits=logits, cache=cache, pos=pos, keys=keys,
+                active=active, remaining=remaining,
+            )
+            return toks.T, actives.T, out  # (B, n_steps) each
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._scan_decode = jax.jit(
             _scan_decode, static_argnames=("n_steps", "greedy")
         )
+        # donate the incoming slot state: both return a full replacement and
+        # the scheduler drops the old dict, so the n_slots-wide KV cache can
+        # be updated in place instead of copied per dispatch (the same hazard
+        # launch/dryrun.py documents for the one-shot decode step)
+        self._admit = jax.jit(_admit, donate_argnums=(0,))
+        self._scan_decode_slots = jax.jit(
+            _scan_decode_slots, static_argnames=("n_steps",), donate_argnums=(1,)
+        )
+
+    # -- slot-batched serving API (infer/scheduler.py drives these) ---------
+
+    def init_slots(self, n_slots: int) -> dict:
+        """Fresh slot-batched decode state: a `n_slots`-wide KV cache plus
+        per-slot counters/sampling params. All slots start inactive."""
+        if self.cfg.input_kind != "tokens" or self.cfg.family == "vlm":
+            raise ValueError(
+                "slot-batched serving requires a tokens-input, non-VLM model "
+                "(embed_fn/image inputs cannot run inside the slotted scan)"
+            )
+        if self.cfg.n_experts:
+            # MoE expert capacity is shared across the batch: tokens from other
+            # slots — including garbage from inactive rows — can evict an
+            # active request's tokens from an expert buffer, so slot outputs
+            # are neither solo-identical nor slot-history-independent. Reject
+            # rather than silently break the scheduler's contract (DESIGN §4).
+            raise ValueError(
+                "slot-batched serving does not support MoE models: shared "
+                "expert capacity couples batch rows, breaking per-request "
+                "token-identity (use one-shot Engine.generate instead)"
+            )
+        return {
+            "cache": init_cache(self.cfg, n_slots, self.max_seq),
+            "logits": jnp.zeros((n_slots, self.cfg.vocab), jnp.float32),
+            "pos": jnp.zeros((n_slots,), jnp.int32),
+            "keys": jnp.zeros((n_slots, 2), jnp.uint32),
+            "active": jnp.zeros((n_slots,), bool),
+            "remaining": jnp.zeros((n_slots,), jnp.int32),
+            "temperature": jnp.ones((n_slots,), jnp.float32),
+            "greedy": jnp.ones((n_slots,), bool),
+        }
+
+    def admit_slot(
+        self,
+        slots: dict,
+        slot: int,
+        prompt_tokens,
+        *,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> dict:
+        """Prefill one request (batch-1) and install it into `slot`.
+
+        The prefill compiles per distinct prompt length (same caveat as
+        `generate`); the install itself compiles once. The slot then produces
+        the exact token stream a solo `generate(prompt, max_new_tokens,
+        temperature=..., seed=...)` would.
+        """
+        prompt = jnp.asarray(prompt_tokens, jnp.int32).reshape(1, -1)
+        plen = int(prompt.shape[1])
+        if plen + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt_len({plen}) + max_new_tokens({max_new_tokens}) exceeds "
+                f"max_seq={self.max_seq}"
+            )
+        if self._unit_cache is None:
+            # one zeroed batch-1 cache per engine: _prefill is purely
+            # functional (no donation), so the template is reusable and the
+            # admission hot path skips a full max_seq cache alloc+zero
+            self._unit_cache = init_cache(self.cfg, 1, self.max_seq)
+        logits, cache1 = self._prefill(self.params, prompt, None, self._unit_cache)
+        greedy = temperature <= 0
+        return self._admit(
+            slots,
+            jnp.int32(slot),
+            cache1,
+            logits[:, -1],
+            jax.random.PRNGKey(seed),
+            jnp.int32(plen),
+            jnp.int32(max_new_tokens),
+            jnp.float32(temperature if not greedy else 1.0),
+            jnp.bool_(greedy),
+        )
+
+    def decode_slots(self, slots: dict, n_steps: int):
+        """Run `n_steps` decode steps over the whole slot batch.
+
+        Returns `(tokens (B, n_steps) int32, active (B, n_steps) bool,
+        new_slots)`; `tokens[b, t]` is a real emission iff `active[b, t]`.
+        """
+        return self._scan_decode_slots(self.params, slots, n_steps=n_steps)
 
     def generate(
         self,

@@ -1,0 +1,204 @@
+"""Continuous-batching scheduler over the slot-batched decode path.
+
+The paper's headline number is decode-phase throughput on a *serving*
+workload (§V: OPT-175B token generation): the LUT/BCQ kernels only pay off
+end-to-end if the decode batch stays fed. One-shot ``Engine.generate`` runs a
+fixed batch in lockstep — every request waits for the longest one, and the
+batch drains as requests finish. This module keeps a fixed-width decode batch
+full instead (Orca-style continuous batching):
+
+- requests wait in an **admission queue**;
+- the decode batch has ``n_slots`` **slots**; a free slot is filled by
+  prefilling the next queued request (batch-1) and scatter-installing its KV
+  rows, position counter, PRNG key and sampling params into the slot
+  (``Engine.admit_slot``);
+- decode runs in **chunks** of ``chunk`` scanned steps over the whole batch
+  (``Engine.decode_slots``); per-slot active masks let requests finish
+  mid-chunk without stalling neighbours;
+- a finished slot is freed and refilled at the next chunk boundary.
+
+Correctness contract (tests/test_scheduler.py): the interleaving is
+*invisible* — each request's tokens are identical to running it alone through
+``Engine.generate(prompt, max_new_tokens, temperature=..., seed=...)``. This
+holds because batch rows are fully independent in the model forward (per-slot
+positions, per-slot cache rows, per-slot PRNG streams) and the batched
+per-row compute is bitwise equal to the batch-1 compute. MoE families are the
+documented exception: expert-capacity dropping couples batch rows, so
+continuous batching there is throughput-correct but not token-identical.
+
+Admission happens at chunk boundaries only: ``chunk=1`` gives per-token
+admission (lowest queue latency), larger chunks amortise dispatch overhead
+across more decode steps (highest host throughput). Completion detection is
+host-side (the per-request budget is known), deactivation is device-side (the
+active mask inside the scan), so a mid-chunk finish never emits extra tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.infer.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `seed`/`temperature` are per-request: mixed
+    greedy and sampled requests share a batch."""
+
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    rid: Optional[int] = None  # assigned at submit() if None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,)
+    new_tokens: np.ndarray  # (max_new_tokens,)
+    admitted_at_step: int  # scheduler decode-step counter at admission
+    finished_at_step: int
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """prompt + generation, the same layout GenerationResult.tokens uses."""
+        return np.concatenate([self.prompt, self.new_tokens])
+
+
+class _Tenant:
+    __slots__ = ("req", "emitted", "admitted_at_step")
+
+    def __init__(self, req: Request, admitted_at_step: int):
+        self.req = req
+        self.emitted: List[int] = []
+        self.admitted_at_step = admitted_at_step
+
+
+class Scheduler:
+    """Continuous-batching front-end for one :class:`Engine`.
+
+    >>> sched = Scheduler(engine, n_slots=4)
+    >>> sched.submit(Request(prompt, max_new_tokens=16))
+    >>> done = sched.run()   # or: sched.step() in a serving loop
+    """
+
+    def __init__(self, engine: Engine, n_slots: int = 4, chunk: int = 8):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.engine = engine
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.slots = engine.init_slots(n_slots)
+        self.queue: Deque[Request] = deque()
+        self._tenants: List[Optional[_Tenant]] = [None] * n_slots
+        self.decode_steps = 0  # total chunked decode steps executed
+        self.steps_active = 0  # sum over steps of active slots (utilisation)
+        self._rid_counter = itertools.count()
+        self._used_rids = set()  # rids ever seen by THIS scheduler
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        plen = int(req.prompt.size)
+        if plen + req.max_new_tokens > self.engine.max_seq:
+            raise ValueError(
+                f"request needs {plen + req.max_new_tokens} cache rows, "
+                f"engine max_seq={self.engine.max_seq}"
+            )
+        if req.rid is None:
+            # skip values a caller-supplied rid already claimed: rids must be
+            # unique per scheduler or `{c.rid: c for c in run()}` drops results
+            req.rid = next(
+                r for r in self._rid_counter if r not in self._used_rids
+            )
+        elif req.rid in self._used_rids:
+            raise ValueError(
+                f"rid {req.rid!r} already used in this scheduler (a Request "
+                "submitted elsewhere keeps its assigned rid — pass a fresh "
+                "Request or an explicit unique rid)"
+            )
+        self._used_rids.add(req.rid)
+        self.queue.append(req)
+        return req.rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(t is not None for t in self._tenants)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.n_active == 0
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _admit_free_slots(self) -> None:
+        for slot in range(self.n_slots):
+            if not self.queue:
+                return
+            if self._tenants[slot] is None:
+                req = self.queue.popleft()
+                self.slots = self.engine.admit_slot(
+                    self.slots,
+                    slot,
+                    req.prompt,
+                    max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature,
+                    seed=req.seed,
+                )
+                self._tenants[slot] = _Tenant(req, self.decode_steps)
+
+    def step(self) -> List[Completion]:
+        """Admit into free slots, run one decode chunk, harvest completions."""
+        self._admit_free_slots()
+        if self.n_active == 0:
+            return []
+        toks, actives, self.slots = self.engine.decode_slots(self.slots, self.chunk)
+        toks = np.asarray(toks)  # (B, chunk)
+        actives = np.asarray(actives)
+        self.decode_steps += self.chunk
+        self.steps_active += int(actives.sum())
+
+        done: List[Completion] = []
+        for slot, tenant in enumerate(self._tenants):
+            if tenant is None:
+                continue
+            tenant.emitted.extend(int(t) for t in toks[slot][actives[slot]])
+            if len(tenant.emitted) >= tenant.req.max_new_tokens:
+                assert len(tenant.emitted) == tenant.req.max_new_tokens, (
+                    "device active-mask emitted past the request budget"
+                )
+                done.append(
+                    Completion(
+                        rid=tenant.req.rid,
+                        prompt=tenant.req.prompt,
+                        new_tokens=np.asarray(tenant.emitted, np.int32),
+                        admitted_at_step=tenant.admitted_at_step,
+                        finished_at_step=self.decode_steps,
+                    )
+                )
+                self._tenants[slot] = None  # freed; refilled next chunk boundary
+        return done
+
+    def run(self, max_chunks: int = 100_000) -> List[Completion]:
+        """Drain the queue completely; returns completions in finish order."""
+        out: List[Completion] = []
+        for _ in range(max_chunks):
+            if self.idle:
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"scheduler did not drain within {max_chunks} chunks")

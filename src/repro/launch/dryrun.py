@@ -30,10 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.hlo import collective_bytes, total_collective_bytes
-from repro.analysis.hlo_cost import analyze as hlo_analyze
+from repro.analysis.hlo_cost import analyze as hlo_analyze, normalize_cost_analysis
 from repro.analysis.roofline import model_flops_estimate, roofline
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_production_mesh, production_axes
+from repro.launch.mesh import make_production_mesh, production_axes, set_mesh
 from repro.models import init_cache, init_params
 from repro.models.config import SHAPES, ModelConfig, ShapeConfig
 from repro.parallel import batch_specs, cache_specs, param_specs
@@ -105,7 +105,7 @@ def input_specs(
         cfg = _dc.replace(cfg, kv_cache_dtype="int8", stages=None)
     sc: ShapeConfig = SHAPES[shape]
     if sc.name == "long_500k" and not cfg.supports_long_context:
-        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped (DESIGN.md §4)")
+        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped (DESIGN.md §5)")
 
     policy = QuantPolicy(q=quant_q, g=128) if quant_q else None
     p_structs = param_structs(cfg, policy)
@@ -293,7 +293,7 @@ def run_cell(
     # semantics; without this every decode step would copy the full KV cache)
     donate = {"train": (0, 1), "prefill": (2,), "decode": (1,)}[meta["kind"]]
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(
             step,
             in_shardings=in_shardings,
@@ -305,7 +305,7 @@ def run_cell(
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)  # raw single-pass HLO sweep (reference)
     tc = hlo_analyze(hlo)  # trip-count-aware custom cost model (the roofline)

@@ -7,9 +7,32 @@ never touches jax device state — the dry-run must set
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
 from repro.parallel.sharding import MeshAxes, multi_pod_axes, single_pod_axes
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Activate ``mesh`` as the ambient mesh, across JAX generations.
+
+    Newest JAX spells this ``jax.set_mesh``; before that ``jax.sharding
+    .use_mesh``; older releases enter the ``Mesh`` object itself as a context
+    manager (which populates the thread-local resource env that
+    :func:`repro.parallel.compat.get_abstract_mesh` reads back). All mesh
+    activation in this repo goes through here — never call the jax API
+    directly.
+    """
+    if hasattr(jax, "set_mesh"):
+        ctx = jax.set_mesh(mesh)
+    elif hasattr(jax.sharding, "use_mesh"):
+        ctx = jax.sharding.use_mesh(mesh)
+    else:
+        ctx = mesh
+    with ctx:
+        yield mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

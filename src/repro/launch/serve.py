@@ -1,11 +1,18 @@
-"""Serving launcher: quantize + batched generation (paper Fig. 13 pipeline).
+"""Serving launcher: quantize + continuous-batching generation (paper §V
+workload shape: many concurrent decode requests against one weight-resident
+quantized model).
 
-PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 128
+PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 128 \
+    --requests 12 --slots 4 --rate 8
 
-Decode runs the scanned fast path by default (``Engine.generate(scan=True)``:
-one ``lax.scan`` dispatch for all generated tokens, on-device sampling, fused
-QKV/gate-up projection kernels — DESIGN.md §2.3/§3). ``--no-scan`` forces the
-per-token step loop, e.g. to measure the dispatch overhead it removes.
+Requests enter an admission queue and are continuously batched into a
+``--slots``-wide decode batch (``repro.infer.Scheduler``): a request joins as
+soon as a slot frees up, finishes on its own budget, and its tokens are
+identical to a solo ``Engine.generate`` call (tests/test_scheduler.py).
+``--rate`` simulates a Poisson arrival process (requests/s; 0 = all queued at
+t=0). ``--sequential`` instead serves the same workload as one-shot scanned
+``generate`` calls in arrival order — the PR 1 fast path, kept as the
+baseline the scheduler is measured against (BENCH_serve.json).
 """
 
 from __future__ import annotations
@@ -18,9 +25,74 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import MarkovCorpus
-from repro.infer import Engine
+from repro.infer import Engine, Request, Scheduler
 from repro.models import init_params, reduced
 from repro.quant import QuantPolicy, quantize_params, quantized_bytes
+
+
+def build_requests(cfg, n, prompt_len, gen, *, mixed_temperature=True, seed=3):
+    corpus = MarkovCorpus(cfg.vocab, seed=seed)
+    reqs = []
+    for i in range(n):
+        prompt = corpus.sample(1, prompt_len, seed=100 + i)[0, :prompt_len]
+        temp = [0.0, 1.0, 0.7][i % 3] if mixed_temperature else 0.0
+        reqs.append(
+            Request(
+                prompt=prompt.astype(np.int32),
+                max_new_tokens=gen,
+                temperature=temp,
+                seed=10 + i,
+            )
+        )
+    return reqs
+
+
+def poisson_arrivals(n, rate, seed=0):
+    """Cumulative arrival offsets (seconds). rate<=0 → everything at t=0."""
+    if rate <= 0:
+        return np.zeros(n)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk):
+    """Wall-clock serve loop: submit each request at its arrival offset, step
+    the scheduler whenever there is work. Returns (scheduler, completions,
+    makespan_s) — the scheduler is handed back for utilisation stats."""
+    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk)
+    done = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(done) < len(reqs):
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            sched.submit(reqs[i])
+            i += 1
+        if sched.idle:
+            # nothing in flight: sleep until the next arrival
+            time.sleep(max(0.0, arrivals[i] - now))
+            continue
+        done.extend(sched.step())
+    return sched, done, time.perf_counter() - t0
+
+
+def drive_sequential(engine, reqs, arrivals):
+    """Baseline: one-shot scanned `generate` per request, in arrival order."""
+    t0 = time.perf_counter()
+    outs = []
+    for req, at in zip(reqs, arrivals):
+        wait = at - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        outs.append(
+            engine.generate(
+                req.prompt[None],
+                req.max_new_tokens,
+                temperature=req.temperature,
+                seed=req.seed,
+            )
+        )
+    return outs, time.perf_counter() - t0
 
 
 def main() -> None:
@@ -28,11 +100,19 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
     ap.add_argument("--q", type=int, default=4, help="BCQ bits (0 = dense)")
     ap.add_argument("--g", type=int, default=128)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-batch width (concurrent requests)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per scheduler dispatch (admission "
+                         "happens at chunk boundaries)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--no-scan", action="store_true",
-                    help="per-token step loop instead of the scanned decode")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in requests/s (0 = all at t=0)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="serve with one-shot scanned generate calls instead "
+                         "of the continuous-batching scheduler (baseline)")
     args = ap.parse_args()
 
     # reduced config sized so quantization actually bites (>=128-dim linears)
@@ -48,18 +128,27 @@ def main() -> None:
         params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
         print(f"BCQ q={args.q} g={args.g}: {quantized_bytes(params)/2**20:.2f} MiB")
 
-    corpus = MarkovCorpus(cfg.vocab, seed=3)
-    prompts = corpus.sample(args.batch, args.prompt_len, seed=7)
-    prompts = prompts[:, : args.prompt_len].astype(np.int32)
-    eng = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8)
+    engine = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8)
     del params  # the engine holds the fused layout; free the unfused tree
-    t0 = time.perf_counter()
-    res = eng.generate(prompts, args.gen, scan=not args.no_scan)
-    dt = time.perf_counter() - t0
-    toks = args.batch * args.gen
-    mode = "step-loop" if args.no_scan else "scanned"
-    print(f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on this host, {mode} decode)")
-    print("sample:", res.tokens[0, args.prompt_len :])
+    reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen)
+    arrivals = poisson_arrivals(args.requests, args.rate, seed=1)
+    total_new = sum(r.max_new_tokens for r in reqs)
+
+    if args.sequential:
+        outs, dt = drive_sequential(engine, reqs, arrivals)
+        print(f"[sequential] {len(outs)} requests, {total_new} tokens in "
+              f"{dt:.2f}s ({total_new/dt:.1f} tok/s on this host)")
+        print("sample:", outs[0].tokens[0, args.prompt_len:])
+    else:
+        sched, done, dt = drive_continuous(
+            engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk
+        )
+        util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
+        print(f"[continuous] {len(done)} requests, {total_new} tokens in "
+              f"{dt:.2f}s ({total_new/dt:.1f} tok/s on this host, "
+              f"{args.slots} slots, chunk={args.chunk}, "
+              f"slot utilisation {util:.0%})")
+        print("sample:", done[0].new_tokens)
 
 
 if __name__ == "__main__":

@@ -275,6 +275,12 @@ def attention(
         # on `model`; constrain q to match so the score einsum is a local
         # partial followed by a tiny all-reduce of (B,1,D) partials — NOT a
         # whole-cache all-gather (was 64 GB/step).
+        #
+        # `pos` may be a scalar (whole batch at one position — Engine.generate)
+        # or a (B,) array (slot-batched serving: each batch row is an
+        # independent request at its own position — infer/scheduler). The
+        # per-row mask values are identical to the scalar case, so a slotted
+        # decode reproduces solo decodes bit-for-bit per row.
         new_cache = _cache_write(cache, k, v, pos, window)
         ck, cv = new_cache["k"], new_cache["v"]
         if "k_scale" in new_cache:
@@ -283,12 +289,22 @@ def attention(
         q = constrain_decode_q(q)
         s_max = ck.shape[1]
         slot = jnp.arange(s_max)
-        if window:
-            stored = _ring_positions(slot, pos + 1, s_max)
-            valid = (stored >= 0) & (stored <= pos) & (stored > pos - window)
+        if jnp.ndim(pos) == 0:
+            if window:
+                stored = _ring_positions(slot, pos + 1, s_max)
+                valid = (stored >= 0) & (stored <= pos) & (stored > pos - window)
+            else:
+                valid = slot <= pos
+            mask = valid[None, None, None, :]
         else:
-            valid = slot <= pos
-        out = _sdpa(q, ck, cv, valid[None, None, None, :])
+            pb = pos[:, None]  # (B, 1)
+            if window:
+                stored = _ring_positions(slot[None, :], pb + 1, s_max)
+                valid = (stored >= 0) & (stored <= pb) & (stored > pb - window)
+            else:
+                valid = slot[None, :] <= pb
+            mask = valid[:, None, None, :]
+        out = _sdpa(q, ck, cv, mask)
     out = linear(out.reshape(b, s, cfg.q_dim), p["wo"])
     return out, new_cache
 
@@ -317,6 +333,11 @@ def _cache_write(cache: dict, k: Array, v: Array, pos: Array, window: int) -> di
     scan-carry variant with 5-D DUS was tried and REJECTED: XLA's copy
     insertion duplicates the whole carry whenever the loop body also READS a
     slice of it (measured 105 GB/step vs 15 GB for the xs/ys form).
+
+    ``pos`` may also be a (B,) array (slot-batched serving decode): each batch
+    row writes at its own position via a per-row DUS under vmap. That lowers
+    to a batched scatter — costlier than the scalar-start form, accepted on
+    the serving path where rows are independent requests by design.
     """
     ck, cv = cache["k"], cache["v"]
     s_max = ck.shape[1]
@@ -325,6 +346,23 @@ def _cache_write(cache: dict, k: Array, v: Array, pos: Array, window: int) -> di
     if quantized:
         k, k_scale = _kv_quantize(k)
         v, v_scale = _kv_quantize(v)
+
+    if jnp.ndim(pos) == 1:
+        # slotted decode write (one fresh token per independent row)
+        if s != 1:
+            raise ValueError("per-slot cache writes require single-token decode")
+        start_b = (pos % s_max if window else pos).astype(jnp.int32)
+
+        def dus_row(buf, new, st):
+            idxs = (st,) + (jnp.int32(0),) * (buf.ndim - 1)
+            return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), idxs)
+
+        write_b = jax.vmap(dus_row, in_axes=(0, 0, 0))
+        out = {"k": write_b(ck, k, start_b), "v": write_b(cv, v, start_b)}
+        if quantized:
+            out["k_scale"] = write_b(cache["k_scale"], k_scale, start_b)
+            out["v_scale"] = write_b(cache["v_scale"], v_scale, start_b)
+        return out
 
     def dus(buf, new, start, rank4=True):
         new = new.astype(buf.dtype)

@@ -266,7 +266,12 @@ def forward(
         h = embeddings.astype(cfg.cdtype)
         b, s, _ = embeddings.shape
     if positions is None:
-        base = jnp.zeros((b, 1), jnp.int32) if pos is None else jnp.full((b, 1), pos)
+        if pos is None:
+            base = jnp.zeros((b, 1), jnp.int32)
+        elif jnp.ndim(pos) == 1:
+            base = pos[:, None]  # per-slot positions (serving decode)
+        else:
+            base = jnp.full((b, 1), pos)
         positions = base + jnp.arange(s)[None, :]
 
     new_stages = []

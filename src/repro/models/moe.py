@@ -20,6 +20,7 @@ from repro.core.qtensor import QuantizedTensor
 from repro.kernels.ops import linear
 from repro.models.config import ModelConfig
 from repro.models.layers import _dense_init, init_mlp, mlp_swiglu
+from repro.parallel.compat import get_abstract_mesh, mesh_axis_names_sizes, shard_map
 
 Array = jax.Array
 
@@ -52,12 +53,9 @@ def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
 
 def _ambient_mesh():
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        return get_abstract_mesh()
     except Exception:
         return None
-    if mesh is None or not getattr(mesh, "axis_names", None):
-        return None
-    return mesh
 
 
 def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
@@ -73,7 +71,7 @@ def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
     """
     mesh = _ambient_mesh()
     if mesh is not None and "model" in mesh.axis_names:
-        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        sizes = dict(zip(*mesh_axis_names_sizes(mesh)))
         m = sizes["model"]
         dp = tuple(a for a in ("pod", "data") if a in sizes)
         n_dp = 1
@@ -154,7 +152,7 @@ def _moe_apply_sharded(
             aux = jax.lax.pmean(aux, dp)
         return out.reshape(bl, sl, d).astype(xb.dtype), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(

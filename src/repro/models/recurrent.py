@@ -4,7 +4,7 @@ xLSTM cells (mLSTM matrix memory, sLSTM scalar memory).
 All three expose a *parallel* form for train/prefill (scan over time for the
 strictly-recurrent cells, quadratic gated form for mLSTM) and an O(1)-state
 *step* form for decode — which is what makes the ``long_500k`` shape lowerable
-for these families (DESIGN.md §4).
+for these families (DESIGN.md §5).
 
 References: Griffin [arXiv:2402.19427] eqs. (1)-(4); xLSTM [arXiv:2405.04517]
 §2 (sLSTM) and §3 (mLSTM), with exponential-gating log-space stabilisation.

@@ -1,5 +1,6 @@
 """Distribution layer: mesh axes + PartitionSpec rules (DP/FSDP/TP/EP/SP)."""
 
+from repro.parallel.compat import get_abstract_mesh, mesh_axis_names_sizes, shard_map
 from repro.parallel.sharding import (
     MeshAxes,
     batch_specs,
@@ -16,4 +17,7 @@ __all__ = [
     "param_specs",
     "single_pod_axes",
     "multi_pod_axes",
+    "get_abstract_mesh",
+    "mesh_axis_names_sizes",
+    "shard_map",
 ]

@@ -22,6 +22,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import axis_size
+
 
 def compress_int8(g: jax.Array, residual: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """→ (int8 payload, f32 scale, new residual)."""
@@ -60,7 +62,7 @@ def allreduce_mean_compressed(grads, residuals, *, axis_names, mode: str = "int8
     """
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     if mode == "none":
         return jax.tree.map(lambda g: jax.lax.pmean(g, axis_names), grads), residuals
     payload, aux, new_res = compress_tree(grads, residuals, mode)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import shard_map
 from repro.train.compress import (
     allreduce_mean_compressed,
     compress_int8,
@@ -45,7 +46,7 @@ def test_allreduce_mean_compressed_modes():
             out, _ = allreduce_mean_compressed(g, None, axis_names=("data",), mode=mode)
             return out
 
-        res = jax.shard_map(
+        res = shard_map(
             fn, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False
         )(grads)
         tol = {"none": 1e-7, "bf16": 1e-2, "int8": 2e-2}[mode]

@@ -10,6 +10,7 @@ _CODE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import set_mesh
 from repro.models.config import ModelConfig
 from repro.models.moe import init_moe, _moe_apply_global, moe_apply
 
@@ -22,12 +23,12 @@ x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16, 32)), jnp.float
 y_ref, _ = _moe_apply_global(p, cfg, x)
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_sh, _ = jax.jit(lambda p, x: moe_apply(p, cfg, x))(p, x)
 np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
 
 # gradients flow through the psum/shard_map path
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g = jax.jit(jax.grad(lambda p, x: moe_apply(p, cfg, x)[0].sum()))(p, x)
 assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
 
@@ -38,7 +39,7 @@ cfg2 = ModelConfig(name="t2", family="moe", n_layers=2, d_model=32, n_heads=2,
                    param_dtype="float32", compute_dtype="float32")
 p2 = init_moe(jax.random.PRNGKey(1), cfg2)
 y2_ref, _ = _moe_apply_global(p2, cfg2, x)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y2_sh, _ = jax.jit(lambda p, x: moe_apply(p, cfg2, x))(p2, x)
 np.testing.assert_allclose(np.asarray(y2_sh), np.asarray(y2_ref), rtol=2e-4, atol=2e-4)
 print("MOE-SHARDED-OK")
