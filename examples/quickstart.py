@@ -12,17 +12,22 @@ Serving many concurrent requests goes through the continuous-batching
 scheduler (DESIGN.md §4) instead of one-shot ``generate``:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \\
-        --q 4 --g 128 --requests 12 --slots 4 --rate 8
+        --q 4 --g 128 --requests 12 --slots 4 --rate 8 --speculate 2:4
 
 Requests are continuously batched into a ``--slots``-wide decode batch with
 per-request temperature/seed/budget; ``--sequential`` serves the same
 workload with one-shot ``generate`` calls for comparison (BENCH_serve.json),
-and ``--rate`` simulates Poisson arrivals. Programmatic use::
+and ``--rate`` simulates Poisson arrivals. ``--speculate q':γ`` decodes
+self-speculatively from the nested q'-bit draft (DESIGN.md §5), reporting
+the draft acceptance rate alongside tok/s. Programmatic use::
 
-    from repro.infer import Engine, Request, Scheduler
-    sched = Scheduler(Engine(cfg, params, max_seq=64), n_slots=4)
+    from repro.infer import Engine, Request, Scheduler, SpecConfig
+    eng = Engine(cfg, params, max_seq=64)
+    res = eng.generate(prompt[None], 16, speculate=SpecConfig(q_draft=2, gamma=4))
+    print(res.spec_stats["accept_rate"])       # greedy output == plain greedy
+    sched = Scheduler(eng, n_slots=4, speculate=SpecConfig(2, 4))
     sched.submit(Request(prompt, max_new_tokens=16, temperature=0.7))
-    completions = sched.run()   # token-identical to solo generate()
+    completions = sched.run()   # greedy rows token-identical to solo generate()
 """
 
 import jax.numpy as jnp
@@ -49,3 +54,11 @@ for impl in ("ref", "bcq_mm", "lutgemm"):  # oracle, TPU-native, paper-faithful
     y = quantized_matmul(x, qt, impl=impl, interpret=True)
     rel = float(jnp.linalg.norm(y - y_dense) / jnp.linalg.norm(y_dense))
     print(f"{impl:8s}: rel error vs dense = {rel:.4f}")
+
+# BCQ is nested (paper §III.A): the first q' planes ARE the q'-bit model —
+# every quantized model carries its own cheaper draft for speculative decoding
+for q_draft in (1, 2, 3):
+    qd = qt.truncate(q_draft)
+    rel = float(jnp.linalg.norm(qd.dequantize() - w) / jnp.linalg.norm(w))
+    print(f"nested q'={q_draft}: {qd.nbytes()/2**20:.1f} MiB, "
+          f"weight rel error = {rel:.4f} (monotone in q')")

@@ -66,6 +66,31 @@ class QuantizedTensor:
         """Packed size in bytes (binary + scales)."""
         return int(self.packed.size) + int(self.scales.size) * self.scales.dtype.itemsize
 
+    def truncate(self, q_new: int) -> "QuantizedTensor":
+        """The nested ``q_new``-bit approximation living inside this tensor.
+
+        BCQ is nested by construction (paper §III.A): the greedy solver builds
+        plane ``i`` as a refinement of the residual left by planes ``< i``, so
+        ``packed[:q_new], scales[:q_new]`` is itself a valid ``q_new``-bit BCQ
+        of the same weight — bit-identical to what the greedy solver would
+        emit at ``q=q_new``. This is what makes every quantized model a free
+        family of cheaper draft models (infer/speculative.py).
+
+        The slice is a view at trace time (no repacking, no re-solve); ``g``,
+        ``k``, ``o`` and any leading layer/expert stacking are preserved.
+        """
+        if not 1 <= q_new <= self.q:
+            raise ValueError(f"cannot truncate q={self.q} tensor to q'={q_new}")
+        if q_new == self.q:
+            return self
+        return QuantizedTensor(
+            packed=self.packed[..., :q_new, :, :],
+            scales=self.scales[..., :q_new, :, :],
+            g=self.g,
+            k=self.k,
+            o=self.o,
+        )
+
 
 def fuse_tensors(qts: Sequence[QuantizedTensor]) -> QuantizedTensor:
     """Concatenate N quantized projections along the output dim (DESIGN.md §2.3).

@@ -1,7 +1,9 @@
 """Inference engine: prefill/decode split with quantized weights (paper Fig. 13)
-plus the continuous-batching serving layer (slot-based scheduler)."""
+plus the continuous-batching serving layer (slot-based scheduler) and
+self-speculative decoding from nested BCQ precisions (DESIGN.md §5)."""
 
 from repro.infer.engine import Engine
 from repro.infer.scheduler import Completion, Request, Scheduler
+from repro.infer.speculative import SpecConfig
 
-__all__ = ["Engine", "Scheduler", "Request", "Completion"]
+__all__ = ["Engine", "Scheduler", "Request", "Completion", "SpecConfig"]

@@ -43,8 +43,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.infer.speculative import SpecConfig, freeze_inactive, spec_chunk
 from repro.models import forward, fuse_decode_projections, init_cache
 from repro.models.config import ModelConfig
+from repro.quant import truncate_params
 
 
 @dataclasses.dataclass
@@ -52,6 +54,7 @@ class GenerationResult:
     tokens: np.ndarray  # (B, prompt+generated)
     prompt_len: int
     steps: int
+    spec_stats: Optional[dict] = None  # accept_rate/chunks when speculating
 
 
 def _sample(logits: jax.Array, key: jax.Array, temperature, greedy: bool) -> jax.Array:
@@ -143,16 +146,17 @@ class Engine:
                 slots["cache"],
                 cache1,
             )
-            return {
-                "cache": cache,
-                "logits": slots["logits"].at[slot].set(logits1[0]),
-                "pos": slots["pos"].at[slot].set(plen),
-                "keys": slots["keys"].at[slot].set(key),
-                "active": slots["active"].at[slot].set(True),
-                "remaining": slots["remaining"].at[slot].set(max_new),
-                "temperature": slots["temperature"].at[slot].set(temperature),
-                "greedy": slots["greedy"].at[slot].set(greedy),
-            }
+            return dict(
+                slots,
+                cache=cache,
+                logits=slots["logits"].at[slot].set(logits1[0]),
+                pos=slots["pos"].at[slot].set(plen),
+                keys=slots["keys"].at[slot].set(key),
+                active=slots["active"].at[slot].set(True),
+                remaining=slots["remaining"].at[slot].set(max_new),
+                temperature=slots["temperature"].at[slot].set(temperature),
+                greedy=slots["greedy"].at[slot].set(greedy),
+            )
 
         def _scan_decode_slots(params, slots, *, n_steps):
             """`n_steps` slot-batched decode steps as ONE dispatch.
@@ -208,6 +212,148 @@ class Engine:
             )
             return toks.T, actives.T, out  # (B, n_steps) each
 
+        def _admit_spec(
+            slots, slot, cache1, dcache1, logits1, key, dkey, plen, max_new,
+            temperature, greedy, spec_on,
+        ):
+            """Spec-mode admission: the plain install plus the draft-cache row,
+            the per-row draft PRNG stream, and the request's FIRST token —
+            sampled here exactly as the plain path's first decode step would
+            (one key split, same categorical shape), recorded in `t_pend` and
+            already counted against the budget."""
+            slots = _admit(
+                slots, slot, cache1, logits1, key, plen, max_new, temperature, greedy
+            )
+            dcache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                ),
+                slots["draft_cache"],
+                dcache1,
+            )
+            key2, sub = jax.random.split(key)
+            lg = logits1[0]
+            tok = jnp.where(
+                greedy,
+                jnp.argmax(lg),
+                jax.random.categorical(sub, lg[None] / temperature)[0],
+            ).astype(jnp.int32)
+            return dict(
+                slots,
+                draft_cache=dcache,
+                t_pend=slots["t_pend"].at[slot].set(tok),
+                spec=slots["spec"].at[slot].set(spec_on),
+                keys=slots["keys"].at[slot].set(key2),
+                draft_keys=slots["draft_keys"].at[slot].set(dkey),
+                remaining=slots["remaining"].at[slot].set(max_new - 1),
+                active=slots["active"].at[slot].set(max_new > 1),
+            )
+
+        def _scan_spec_slots(params, draft_params, slots, *, n_chunks, gamma):
+            """`n_chunks` speculative chunks over the slot batch, ONE dispatch.
+
+            Each chunk commits 1..gamma+1 tokens per row (per-row budgets clip
+            the tail); rows with `spec=False` are forced to n_acc=0 inside the
+            chunk and so emit exactly one plain-decode token per chunk, with
+            a PRNG stream bit-identical to the non-speculative path."""
+            temperature, greedy, spec_on = (
+                slots["temperature"], slots["greedy"], slots["spec"],
+            )
+
+            def body(carry, _):
+                state, active, remaining = carry
+                commit, n_keep, ns = spec_chunk(
+                    cfg, params, draft_params, state, gamma=gamma,
+                    greedy=greedy, temperature=temperature, spec_enabled=spec_on,
+                )
+                emit_n = jnp.where(active, jnp.minimum(n_keep, remaining), 0)
+                valid = jnp.arange(gamma + 1)[None, :] < emit_n[:, None]
+                toks = jnp.where(valid, commit, -1)
+                new_remaining = remaining - emit_n
+                new_active = active & (new_remaining > 0)
+                frozen = freeze_inactive(ns, state, active)
+                return (frozen, new_active, new_remaining), (toks, valid)
+
+            state0 = {
+                k: slots[k]
+                for k in ("t_pend", "pos", "keys", "draft_keys", "cache", "draft_cache")
+            }
+            (state, active, remaining), (toks, valid) = jax.lax.scan(
+                body, (state0, slots["active"], slots["remaining"]), None,
+                length=n_chunks,
+            )
+            b = toks.shape[1]
+            toks = toks.transpose(1, 0, 2).reshape(b, -1)  # (B, n_chunks*(γ+1))
+            valid = valid.transpose(1, 0, 2).reshape(b, -1)
+            out = dict(slots, active=active, remaining=remaining, **state)
+            return toks, valid, out
+
+        def _spec_generate(
+            params, draft_params, logits0, cache, dcache, pos0, key, dkey,
+            temperature, *, n_steps, gamma, greedy,
+        ):
+            """One-shot speculative generation: chunks under a while_loop until
+            every row has emitted `n_steps` tokens (host syncs once)."""
+            b = logits0.shape[0]
+            cap = n_steps + gamma + 1
+            row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(b))
+            draft_keys = jax.vmap(lambda i: jax.random.fold_in(dkey, i))(jnp.arange(b))
+            greedy_vec = jnp.full((b,), greedy)
+            temp_vec = jnp.full((b,), temperature)
+            spec_on = jnp.ones((b,), bool)
+
+            # first token = the target's own next token from the prefill logits
+            splits = jax.vmap(jax.random.split)(row_keys)
+            row_keys, sub = splits[:, 0], splits[:, 1]
+            sampled = jax.vmap(
+                lambda kk, lg: jax.random.categorical(kk, lg[None] / temperature)[0]
+            )(sub, logits0)
+            t0 = jnp.where(greedy_vec, jnp.argmax(logits0, -1), sampled).astype(
+                jnp.int32
+            )
+            buf0 = jnp.zeros((b, cap), jnp.int32).at[:, 0].set(t0)
+
+            state0 = dict(
+                t_pend=t0, pos=pos0, keys=row_keys, draft_keys=draft_keys,
+                cache=cache, draft_cache=dcache,
+            )
+            emitted0 = jnp.ones((b,), jnp.int32)
+            stats0 = (jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+            def cond(carry):
+                return jnp.any(carry[1] < n_steps)
+
+            def body(carry):
+                state, emitted, buf, (acc, prop, chunks) = carry
+                active = emitted < n_steps
+                commit, n_keep, ns = spec_chunk(
+                    cfg, params, draft_params, state, gamma=gamma,
+                    greedy=greedy_vec, temperature=temp_vec, spec_enabled=spec_on,
+                )
+
+                def wrow(bufrow, vec, start, act):
+                    # inactive rows park their junk write beyond n_steps
+                    start = jnp.where(act, start, jnp.int32(cap - gamma - 1))
+                    return jax.lax.dynamic_update_slice(bufrow, vec, (start,))
+
+                buf = jax.vmap(wrow)(buf, commit, emitted, active)
+                frozen = freeze_inactive(ns, state, active)
+                # count only acceptances whose commits survive the n_steps
+                # slice — the final chunk's clipped tail is not a real win
+                counted = jnp.minimum(n_keep - 1, n_steps - emitted)
+                emitted = jnp.where(active, emitted + n_keep, emitted)
+                stats = (
+                    acc + jnp.sum(jnp.where(active, counted, 0)),
+                    prop + jnp.sum(active) * gamma,
+                    chunks + 1,
+                )
+                return (frozen, emitted, buf, stats)
+
+            _, _, buf, stats = jax.lax.while_loop(
+                cond, body, (state0, emitted0, buf0, stats0)
+            )
+            return buf[:, :n_steps], stats
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._scan_decode = jax.jit(
@@ -221,12 +367,63 @@ class Engine:
         self._scan_decode_slots = jax.jit(
             _scan_decode_slots, static_argnames=("n_steps",), donate_argnums=(1,)
         )
+        self._admit_spec = jax.jit(_admit_spec, donate_argnums=(0,))
+        self._scan_spec_slots = jax.jit(
+            _scan_spec_slots, static_argnames=("n_chunks", "gamma"),
+            donate_argnums=(2,),
+        )
+        self._spec_generate = jax.jit(
+            _spec_generate, static_argnames=("n_steps", "gamma", "greedy")
+        )
+        self._draft_params: dict = {}  # q_draft -> truncated param tree
+        self._slot_spec: Optional[SpecConfig] = None  # set by init_slots
+
+    # -- speculative decoding (infer/speculative.py) -------------------------
+
+    def draft_params(self, q_draft: int):
+        """The nested ``q_draft``-bit draft view of this engine's params
+        (zero extra solve; norms/embeddings/dense leaves shared by reference).
+        Cached per ``q_draft`` for the engine's lifetime."""
+        if q_draft not in self._draft_params:
+            self._draft_params[q_draft] = truncate_params(self.params, q_draft)
+        return self._draft_params[q_draft]
+
+    def _validate_spec(self, spec: SpecConfig) -> None:
+        cfg = self.cfg
+        if cfg.input_kind != "tokens":
+            raise ValueError(
+                "speculative decoding requires a tokens-input model (host-side "
+                "embed_fn cannot run inside the jitted chunk)"
+            )
+        if cfg.n_experts:
+            # verify batches γ+1 tokens through shared expert capacity, which
+            # couples them — target logits would differ from step-by-step
+            # decode, breaking the exactness contract (same exclusion as
+            # slot-batched serving, DESIGN.md §4/§5)
+            raise ValueError(
+                "speculative decoding does not support MoE models: shared "
+                "expert capacity couples the verified chunk's tokens, so the "
+                "batched verify is not equivalent to step-by-step decode"
+            )
+        has_window = any(
+            bt == "local_attn" for pattern, _ in cfg.stages for bt in pattern
+        )
+        if has_window and spec.gamma + 1 >= min(self.max_seq, cfg.window):
+            raise ValueError(
+                f"gamma={spec.gamma} too large for the ring-buffer window "
+                f"{min(self.max_seq, cfg.window)} (need gamma+1 < window)"
+            )
 
     # -- slot-batched serving API (infer/scheduler.py drives these) ---------
 
-    def init_slots(self, n_slots: int) -> dict:
+    def init_slots(self, n_slots: int, speculate: Optional[SpecConfig] = None) -> dict:
         """Fresh slot-batched decode state: a `n_slots`-wide KV cache plus
-        per-slot counters/sampling params. All slots start inactive."""
+        per-slot counters/sampling params. All slots start inactive.
+
+        ``speculate`` switches the slot batch to speculative chunks
+        (DESIGN.md §5): the state grows a draft-model cache, per-row pending
+        tokens, draft PRNG streams and a per-row opt-in flag; drive it with
+        :meth:`spec_decode_slots` instead of :meth:`decode_slots`."""
         if self.cfg.input_kind != "tokens" or self.cfg.family == "vlm":
             raise ValueError(
                 "slot-batched serving requires a tokens-input, non-VLM model "
@@ -243,7 +440,7 @@ class Engine:
                 "expert capacity couples batch rows, breaking per-request "
                 "token-identity (use one-shot Engine.generate instead)"
             )
-        return {
+        slots = {
             "cache": init_cache(self.cfg, n_slots, self.max_seq),
             "logits": jnp.zeros((n_slots, self.cfg.vocab), jnp.float32),
             "pos": jnp.zeros((n_slots,), jnp.int32),
@@ -253,6 +450,14 @@ class Engine:
             "temperature": jnp.ones((n_slots,), jnp.float32),
             "greedy": jnp.ones((n_slots,), bool),
         }
+        self._slot_spec = speculate
+        if speculate is not None:
+            self._validate_spec(speculate)
+            slots["draft_cache"] = init_cache(self.cfg, n_slots, self.max_seq)
+            slots["t_pend"] = jnp.zeros((n_slots,), jnp.int32)
+            slots["spec"] = jnp.zeros((n_slots,), bool)
+            slots["draft_keys"] = jnp.zeros((n_slots, 2), jnp.uint32)
+        return slots
 
     def admit_slot(
         self,
@@ -263,6 +468,7 @@ class Engine:
         max_new_tokens: int,
         temperature: float = 0.0,
         seed: int = 0,
+        speculate: bool = True,
     ) -> dict:
         """Prefill one request (batch-1) and install it into `slot`.
 
@@ -270,13 +476,23 @@ class Engine:
         `generate`); the install itself compiles once. The slot then produces
         the exact token stream a solo `generate(prompt, max_new_tokens,
         temperature=..., seed=...)` would.
+
+        In speculative slot batches (``init_slots(speculate=...)``) the draft
+        model is prefilled too and the request's FIRST token is sampled at
+        admission (recorded in ``slots["t_pend"][slot]`` and counted against
+        the budget — the caller must emit it). ``speculate=False`` opts the
+        request out per-row: it decodes one plain target token per chunk with
+        its solo-identical PRNG stream.
         """
         prompt = jnp.asarray(prompt_tokens, jnp.int32).reshape(1, -1)
         plen = int(prompt.shape[1])
-        if plen + max_new_tokens > self.max_seq:
+        spec = self._slot_spec
+        headroom = 0 if spec is None else spec.gamma + 1
+        if plen + max_new_tokens + headroom > self.max_seq:
             raise ValueError(
-                f"prompt_len({plen}) + max_new_tokens({max_new_tokens}) exceeds "
-                f"max_seq={self.max_seq}"
+                f"prompt_len({plen}) + max_new_tokens({max_new_tokens})"
+                f"{f' + speculation headroom({headroom})' if headroom else ''} "
+                f"exceeds max_seq={self.max_seq}"
             )
         if self._unit_cache is None:
             # one zeroed batch-1 cache per engine: _prefill is purely
@@ -285,16 +501,24 @@ class Engine:
             self._unit_cache = init_cache(self.cfg, 1, self.max_seq)
         logits, cache1 = self._prefill(self.params, prompt, None, self._unit_cache)
         greedy = temperature <= 0
-        return self._admit(
-            slots,
-            jnp.int32(slot),
-            cache1,
-            logits[:, -1],
-            jax.random.PRNGKey(seed),
+        args = (
             jnp.int32(plen),
             jnp.int32(max_new_tokens),
             jnp.float32(temperature if not greedy else 1.0),
             jnp.bool_(greedy),
+        )
+        if spec is None:
+            return self._admit(
+                slots, jnp.int32(slot), cache1, logits[:, -1],
+                jax.random.PRNGKey(seed), *args,
+            )
+        _, dcache1 = self._prefill(
+            self.draft_params(spec.q_draft), prompt, None, self._unit_cache
+        )
+        return self._admit_spec(
+            slots, jnp.int32(slot), cache1, dcache1, logits[:, -1],
+            jax.random.PRNGKey(seed), jax.random.PRNGKey(seed ^ 0x5BEC),
+            *args, jnp.bool_(speculate),
         )
 
     def decode_slots(self, slots: dict, n_steps: int):
@@ -305,6 +529,21 @@ class Engine:
         """
         return self._scan_decode_slots(self.params, slots, n_steps=n_steps)
 
+    def spec_decode_slots(self, slots: dict, n_chunks: int):
+        """Run `n_chunks` speculative chunks over the whole slot batch.
+
+        Returns `(tokens (B, n_chunks*(gamma+1)) int32, valid (B, same) bool,
+        new_slots)`; each chunk contributes between 1 and gamma+1 valid tokens
+        per active row (1 exactly for rows admitted with speculate=False).
+        """
+        spec = self._slot_spec
+        if spec is None or "draft_cache" not in slots:
+            raise ValueError("slots were not initialised with speculate=...")
+        return self._scan_spec_slots(
+            self.params, self.draft_params(spec.q_draft), slots,
+            n_chunks=n_chunks, gamma=spec.gamma,
+        )
+
     def generate(
         self,
         prompt_tokens: np.ndarray,
@@ -314,6 +553,7 @@ class Engine:
         temperature: float = 0.0,
         seed: int = 0,
         scan: bool = True,
+        speculate: Optional[SpecConfig] = None,
     ) -> GenerationResult:
         """Greedy (temperature=0) or sampled autoregressive generation.
 
@@ -325,7 +565,16 @@ class Engine:
         ``n_steps`` is a static scan length: each *distinct* value compiles
         its own scan graph once (then cached for the engine's lifetime).
         Serving highly variable lengths? Bucket them, or use ``scan=False``
-        whose single ``_decode`` compilation covers every length."""
+        whose single ``_decode`` compilation covers every length.
+
+        ``speculate=SpecConfig(q_draft, gamma)`` decodes self-speculatively
+        (DESIGN.md §5): a ``q_draft``-bit truncation of the same params drafts
+        ``gamma`` tokens per chunk and the full-precision model verifies them
+        in one batched forward — greedy output is token-identical to plain
+        greedy decode; ``temperature>0`` output follows the exact target
+        distribution via rejection sampling (a *different* stream than the
+        plain path's for the same seed — per-row PRNG streams). The result's
+        ``spec_stats`` reports the draft acceptance rate."""
         cfg = self.cfg
         b, s = prompt_tokens.shape[:2]
         cache = init_cache(cfg, b, self.max_seq)
@@ -334,6 +583,41 @@ class Engine:
         )
         key = jax.random.PRNGKey(seed)
         greedy = temperature <= 0
+
+        if speculate is not None:
+            self._validate_spec(speculate)
+            if s + n_steps + speculate.gamma > self.max_seq:
+                raise ValueError(
+                    f"prompt({s}) + n_steps({n_steps}) + gamma({speculate.gamma}) "
+                    f"exceeds max_seq={self.max_seq}"
+                )
+            draft = self.draft_params(speculate.q_draft)
+            dcache = init_cache(cfg, b, self.max_seq)
+            _, dcache = self._prefill(
+                draft, jnp.asarray(prompt_tokens), image_emb, dcache
+            )
+            toks, (acc, prop, chunks) = self._spec_generate(
+                self.params, draft, logits[:, -1], cache, dcache,
+                jnp.full((b,), s, jnp.int32), key,
+                jax.random.PRNGKey(seed ^ 0x5BEC),
+                jnp.float32(temperature if not greedy else 1.0),
+                n_steps=n_steps, gamma=speculate.gamma, greedy=greedy,
+            )
+            tokens = np.concatenate(
+                [np.asarray(prompt_tokens), np.asarray(toks)], axis=1
+            )
+            acc, prop, chunks = int(acc), int(prop), int(chunks)
+            return GenerationResult(
+                tokens=tokens, prompt_len=s, steps=n_steps,
+                spec_stats={
+                    "accept_rate": acc / max(prop, 1),
+                    "accepted": acc,
+                    "proposed": prop,
+                    "chunks": chunks,
+                    "q_draft": speculate.q_draft,
+                    "gamma": speculate.gamma,
+                },
+            )
 
         if scan and cfg.input_kind == "tokens":
             toks, _ = self._scan_decode(

@@ -31,6 +31,17 @@ admission (lowest queue latency), larger chunks amortise dispatch overhead
 across more decode steps (highest host throughput). Completion detection is
 host-side (the per-request budget is known), deactivation is device-side (the
 active mask inside the scan), so a mid-chunk finish never emits extra tokens.
+
+**Speculative serving** (``Scheduler(engine, speculate=SpecConfig(...))``,
+DESIGN.md §5): decode dispatches become draft-verify-accept chunks — each
+chunk commits 1..gamma+1 tokens per row instead of exactly one. Requests opt
+in per row (``Request.speculate``); opted-out rows run one plain target step
+per chunk with their solo-identical PRNG stream. Greedy speculative rows are
+token-identical to solo plain ``generate``; sampled speculative rows follow
+the exact target distribution but a different stream for the same seed
+(rejection sampling consumes randomness differently). The request's first
+token is sampled at admission (it comes from the target's own prefill
+logits), so a chunk always has a pending token to verify behind.
 """
 
 from __future__ import annotations
@@ -43,17 +54,21 @@ from typing import Deque, List, Optional
 import numpy as np
 
 from repro.infer.engine import Engine
+from repro.infer.speculative import SpecConfig
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request. `seed`/`temperature` are per-request: mixed
-    greedy and sampled requests share a batch."""
+    greedy and sampled requests share a batch. ``speculate`` opts this request
+    in/out of speculative decoding when the scheduler runs a speculative slot
+    batch (None → the scheduler's default: in); it is ignored otherwise."""
 
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
     temperature: float = 0.0
     seed: int = 0
+    speculate: Optional[bool] = None
     rid: Optional[int] = None  # assigned at submit() if None
 
     def __post_init__(self):
@@ -95,7 +110,13 @@ class Scheduler:
     >>> done = sched.run()   # or: sched.step() in a serving loop
     """
 
-    def __init__(self, engine: Engine, n_slots: int = 4, chunk: int = 8):
+    def __init__(
+        self,
+        engine: Engine,
+        n_slots: int = 4,
+        chunk: int = 8,
+        speculate: Optional[SpecConfig] = None,
+    ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if chunk < 1:
@@ -103,11 +124,13 @@ class Scheduler:
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
-        self.slots = engine.init_slots(n_slots)
+        self.speculate = speculate
+        self.slots = engine.init_slots(n_slots, speculate=speculate)
         self.queue: Deque[Request] = deque()
         self._tenants: List[Optional[_Tenant]] = [None] * n_slots
         self.decode_steps = 0  # total chunked decode steps executed
         self.steps_active = 0  # sum over steps of active slots (utilisation)
+        self.chunk_rows = 0  # spec mode: row-chunks dispatched (accept-rate est.)
         self._rid_counter = itertools.count()
         self._used_rids = set()  # rids ever seen by THIS scheduler
 
@@ -115,10 +138,12 @@ class Scheduler:
 
     def submit(self, req: Request) -> int:
         plen = int(req.prompt.size)
-        if plen + req.max_new_tokens > self.engine.max_seq:
+        headroom = 0 if self.speculate is None else self.speculate.gamma + 1
+        if plen + req.max_new_tokens + headroom > self.engine.max_seq:
             raise ValueError(
-                f"request needs {plen + req.max_new_tokens} cache rows, "
-                f"engine max_seq={self.engine.max_seq}"
+                f"request needs {plen + req.max_new_tokens + headroom} cache "
+                f"rows (incl. {headroom} speculation headroom), engine "
+                f"max_seq={self.engine.max_seq}"
             )
         if req.rid is None:
             # skip values a caller-supplied rid already claimed: rids must be
@@ -144,13 +169,26 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and self.n_active == 0
 
+    @property
+    def spec_accept_rate(self) -> float:
+        """Estimated draft-acceptance rate over all speculative dispatches:
+        tokens per row-chunk is 1 + gamma * accept_rate (slight underestimate
+        when rows finish mid-dispatch). 0.0 until a spec chunk has run."""
+        if self.speculate is None or self.chunk_rows == 0:
+            return 0.0
+        tokens_per_row_chunk = self.steps_active / self.chunk_rows
+        return max(0.0, (tokens_per_row_chunk - 1.0) / self.speculate.gamma)
+
     # -- scheduling ----------------------------------------------------------
 
-    def _admit_free_slots(self) -> None:
+    def _admit_free_slots(self) -> List[Completion]:
+        """Fill free slots from the queue. In speculative mode admission also
+        emits the request's first token (sampled from its own prefill logits
+        on device), so a budget-1 request can complete right here — returned
+        so its slot frees up for the same admission round."""
+        done: List[Completion] = []
         for slot in range(self.n_slots):
-            if not self.queue:
-                return
-            if self._tenants[slot] is None:
+            while self.queue and self._tenants[slot] is None:
                 req = self.queue.popleft()
                 self.slots = self.engine.admit_slot(
                     self.slots,
@@ -159,39 +197,58 @@ class Scheduler:
                     max_new_tokens=req.max_new_tokens,
                     temperature=req.temperature,
                     seed=req.seed,
+                    speculate=req.speculate is not False,
                 )
-                self._tenants[slot] = _Tenant(req, self.decode_steps)
+                tenant = _Tenant(req, self.decode_steps)
+                self._tenants[slot] = tenant
+                if self.speculate is not None:
+                    tenant.emitted.append(int(np.asarray(self.slots["t_pend"][slot])))
+                    c = self._harvest(slot)
+                    if c is not None:
+                        done.append(c)  # budget-1: finished at admission
+        return done
+
+    def _harvest(self, slot: int) -> Optional[Completion]:
+        tenant = self._tenants[slot]
+        if tenant is None or len(tenant.emitted) < tenant.req.max_new_tokens:
+            return None
+        assert len(tenant.emitted) == tenant.req.max_new_tokens, (
+            "device active-mask emitted past the request budget"
+        )
+        self._tenants[slot] = None  # freed; refilled next chunk boundary
+        return Completion(
+            rid=tenant.req.rid,
+            prompt=tenant.req.prompt,
+            new_tokens=np.asarray(tenant.emitted, np.int32),
+            admitted_at_step=tenant.admitted_at_step,
+            finished_at_step=self.decode_steps,
+        )
 
     def step(self) -> List[Completion]:
         """Admit into free slots, run one decode chunk, harvest completions."""
-        self._admit_free_slots()
+        done = self._admit_free_slots()
         if self.n_active == 0:
-            return []
-        toks, actives, self.slots = self.engine.decode_slots(self.slots, self.chunk)
-        toks = np.asarray(toks)  # (B, chunk)
-        actives = np.asarray(actives)
-        self.decode_steps += self.chunk
-        self.steps_active += int(actives.sum())
+            return done
+        if self.speculate is None:
+            toks, valid, self.slots = self.engine.decode_slots(self.slots, self.chunk)
+            self.decode_steps += self.chunk
+        else:
+            toks, valid, self.slots = self.engine.spec_decode_slots(
+                self.slots, self.chunk
+            )
+            self.decode_steps += self.chunk
+            self.chunk_rows += self.n_active * self.chunk
+        toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))
+        valid = np.asarray(valid)
+        self.steps_active += int(valid.sum())
 
-        done: List[Completion] = []
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:
                 continue
-            tenant.emitted.extend(int(t) for t in toks[slot][actives[slot]])
-            if len(tenant.emitted) >= tenant.req.max_new_tokens:
-                assert len(tenant.emitted) == tenant.req.max_new_tokens, (
-                    "device active-mask emitted past the request budget"
-                )
-                done.append(
-                    Completion(
-                        rid=tenant.req.rid,
-                        prompt=tenant.req.prompt,
-                        new_tokens=np.asarray(tenant.emitted, np.int32),
-                        admitted_at_step=tenant.admitted_at_step,
-                        finished_at_step=self.decode_steps,
-                    )
-                )
-                self._tenants[slot] = None  # freed; refilled next chunk boundary
+            tenant.emitted.extend(int(t) for t in toks[slot][valid[slot]])
+            c = self._harvest(slot)
+            if c is not None:
+                done.append(c)
         return done
 
     def run(self, max_chunks: int = 100_000) -> List[Completion]:

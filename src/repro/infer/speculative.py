@@ -1,0 +1,370 @@
+"""Self-speculative decoding from nested BCQ precisions (DESIGN.md §5).
+
+BCQ is *nested by construction*: the first ``q'`` binary-code planes of a
+``q``-bit weight (``packed[:q']``, ``scales[:q']``) are themselves a valid
+``q'``-bit approximation — the greedy solver builds them as successive
+residual refinements (paper §III.A). Every quantized model therefore carries
+a free family of cheaper draft models, and the paper's own latency model
+(fewer ``q`` planes → proportionally less LUT work and HBM traffic) makes a
+1–2-bit draft decode substantially cheaper than the 4-bit target.
+
+This module turns that into end-to-end decode throughput with *exactly* the
+target model's output distribution:
+
+- **draft**: γ+1 scanned single-token decode steps of the truncated-precision
+  view (:func:`repro.quant.truncate_params`) propose tokens ``d_1..d_γ``;
+- **verify**: ONE batched forward of the full-``q`` model over
+  ``[t_pending, d_1..d_γ]`` (the chunked-decode attention mode of
+  ``models/layers.py``) scores every proposal;
+- **accept**: exact prefix-match for greedy rows, standard rejection sampling
+  (Leviathan et al., 2023) for ``temperature>0`` rows — accepted prefix plus
+  one correction/bonus token is committed, so every chunk emits ≥ 1 token and
+  greedy output is token-identical to plain greedy decode;
+- **rollback**: rejected tokens are erased from both models' caches under the
+  cache-rewind contract (``models/layers.py``): positional KV rows are
+  restored from a pre-chunk snapshot (ring buffers *require* this — a wrapped
+  write clobbers the live entry ``s_max`` positions back; for dense caches it
+  additionally makes the cache bit-identical to never having decoded the
+  chunk), and recurrent state — which folds tokens irreversibly and cannot be
+  re-masked — is rewound by selecting the per-step snapshot at the commit
+  index (``collect_states=True`` verify, scan-carried snapshots on the draft
+  side).
+
+Everything per-row: ``pos``, PRNG streams, acceptance counts and budgets are
+(B,) vectors, so the same chunk body serves one-shot ``Engine.generate`` (a
+``lax.while_loop`` until every row has its budget) and the continuous-batching
+scheduler (a fixed number of chunks per dispatch with active masks, rows
+opting in per request).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculation knobs: draft precision (BCQ planes) and draft length.
+
+    ``q_draft`` planes of the target's own quantized weights form the draft
+    (dense leaves are shared — an unquantized model drafts with itself and
+    accepts everything, which is the degenerate-but-correct case).
+    ``gamma`` tokens are proposed per chunk; each chunk commits between 1 and
+    ``gamma + 1`` tokens.
+    """
+
+    q_draft: int = 2
+    gamma: int = 4
+
+    def __post_init__(self):
+        if self.q_draft < 1:
+            raise ValueError(f"q_draft must be >= 1, got {self.q_draft}")
+        if self.gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+
+    @classmethod
+    def parse(cls, text: str) -> "SpecConfig":
+        """Parse the CLI form ``q_draft:gamma`` (e.g. ``2:4``)."""
+        try:
+            q_draft, gamma = (int(t) for t in text.split(":"))
+        except ValueError as e:
+            raise ValueError(f"expected 'q_draft:gamma', got {text!r}") from e
+        return cls(q_draft=q_draft, gamma=gamma)
+
+
+def has_recurrent_state(cfg: ModelConfig) -> bool:
+    """True if any block carries non-positional (recurrent) decode state."""
+    return any(
+        bt in ("rglru", "mlstm", "slstm")
+        for pattern, _ in cfg.stages
+        for bt in pattern
+    )
+
+
+def has_ring_buffer(cfg: ModelConfig) -> bool:
+    """True if any block's KV cache is a ring buffer (local attention)."""
+    return any(bt == "local_attn" for pattern, _ in cfg.stages for bt in pattern)
+
+
+# ---------------------------------------------------------------------------
+# cache rewind primitives (the contract constants live in models/layers.py)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
+
+
+def snapshot_rows(cache: dict, pos: Array, n: int) -> dict:
+    """Pre-write snapshot of the ``n`` cache rows a chunk will write.
+
+    ``pos`` is the per-row (B,) start position; rows ``pos..pos+n-1`` (mod the
+    ring length for windowed buffers) of every POSITIONAL leaf are gathered to
+    ``(repeat, B, n, ...)``. Non-positional leaves become empty placeholders
+    so the snapshot remains a fixed-shape pytree (it rides a while_loop/scan
+    carry).
+    """
+
+    def visit(path, leaf):
+        if _leaf_name(path) not in L.POSITIONAL_CACHE_LEAVES:
+            return jnp.zeros((0,), jnp.int8)
+        s_eff = leaf.shape[2]
+        idx = (pos[:, None] + jnp.arange(n)) % s_eff  # (B, n)
+        ix = idx.reshape((1,) + idx.shape + (1,) * (leaf.ndim - 3))
+        return jnp.take_along_axis(leaf, ix, axis=2)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def restore_rows(cache: dict, snap: dict, pos: Array, n: int, keep: Array) -> dict:
+    """Roll rejected rows back: row ``pos+j`` keeps its fresh write iff
+    ``j < keep`` (per-row), otherwise its pre-chunk snapshot content returns.
+
+    For ring buffers this un-clobbers the live entries the rejected writes
+    destroyed; for linear caches it leaves the buffer bit-identical to never
+    having decoded the rejected suffix.
+    """
+
+    def visit(path, leaf, sn):
+        if _leaf_name(path) not in L.POSITIONAL_CACHE_LEAVES:
+            return leaf
+        s_eff = leaf.shape[2]
+        b = leaf.shape[1]
+        idx = (pos[:, None] + jnp.arange(n)) % s_eff  # (B, n)
+        ix = idx.reshape((1,) + idx.shape + (1,) * (leaf.ndim - 3))
+        cur = jnp.take_along_axis(leaf, ix, axis=2)  # (repeat, B, n, ...)
+        m = (jnp.arange(n)[None, :] < keep[:, None]).reshape(
+            (1, b, n) + (1,) * (leaf.ndim - 3)
+        )
+        rows = jnp.where(m, cur, sn)
+        return leaf.at[:, jnp.arange(b)[:, None], idx].set(rows)
+
+    return jax.tree_util.tree_map_with_path(visit, cache, snap)
+
+
+def select_recurrent_target(verify_cache: dict, idx: Array) -> dict:
+    """Pick the per-step recurrent snapshots at the per-row commit index.
+
+    ``verify_cache`` came from a ``collect_states=True`` forward: recurrent
+    leaves are ``(repeat, S, B, ...)`` stacks (entry ``t`` = state after
+    consuming chunk token ``t``); positional leaves are untouched. Returns a
+    normal-structure cache with recurrent leaves ``(repeat, B, ...)``.
+    """
+
+    def visit(path, leaf):
+        if _leaf_name(path) not in L.RECURRENT_CACHE_LEAVES:
+            return leaf
+        b = leaf.shape[2]
+        ix = idx.reshape((1, 1, b) + (1,) * (leaf.ndim - 3))
+        return jnp.take_along_axis(leaf, ix, axis=1)[:, 0]
+
+    return jax.tree_util.tree_map_with_path(visit, verify_cache)
+
+
+def select_recurrent_draft(cache: dict, stacks: dict, idx: Array) -> dict:
+    """Same selection for the draft side, whose snapshots were emitted by the
+    draft scan: recurrent leaves of ``stacks`` are ``(S, repeat, B, ...)``
+    (scan-stacked, step axis leading); positional leaves come from ``cache``.
+    """
+
+    def visit(path, leaf, st):
+        if _leaf_name(path) not in L.RECURRENT_CACHE_LEAVES:
+            return leaf
+        b = leaf.shape[1]
+        ix = idx.reshape((1, 1, b) + (1,) * (leaf.ndim - 2))
+        return jnp.take_along_axis(st, ix, axis=0)[0]
+
+    return jax.tree_util.tree_map_with_path(visit, cache, stacks)
+
+
+def _recurrent_only(cache: dict):
+    """Recurrent leaves verbatim, positional leaves as empty placeholders —
+    the per-step snapshot payload the draft scan emits."""
+
+    def visit(path, leaf):
+        if _leaf_name(path) in L.RECURRENT_CACHE_LEAVES:
+            return leaf
+        return jnp.zeros((0,), jnp.int8)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+# ---------------------------------------------------------------------------
+# the draft-verify-accept-rollback chunk
+# ---------------------------------------------------------------------------
+
+
+def freeze_inactive(new_state: dict, old_state: dict, active: Array) -> dict:
+    """Freeze inactive rows' per-row chunk carries (pending token, position,
+    PRNG streams) at their pre-chunk values. Caches are deliberately NOT
+    frozen: an inactive row's garbage writes land beyond its frozen position
+    and are never attended (the same write-before-read argument as the plain
+    slot batch, DESIGN.md §4)."""
+    return dict(
+        new_state,
+        t_pend=jnp.where(active, new_state["t_pend"], old_state["t_pend"]),
+        pos=jnp.where(active, new_state["pos"], old_state["pos"]),
+        keys=jnp.where(active[:, None], new_state["keys"], old_state["keys"]),
+        draft_keys=jnp.where(
+            active[:, None], new_state["draft_keys"], old_state["draft_keys"]
+        ),
+    )
+
+
+def _row_categorical(keys: Array, logits: Array) -> Array:
+    """Per-row seeded categorical, bit-identical to a standalone batch-1 call
+    (the slot-batched sampling idiom of Engine._scan_decode_slots)."""
+    return jax.vmap(lambda kk, lg: jax.random.categorical(kk, lg[None])[0])(
+        keys, logits
+    )
+
+
+def spec_chunk(
+    cfg: ModelConfig,
+    params,
+    draft_params,
+    state: dict,
+    *,
+    gamma: int,
+    greedy: Array,  # (B,) bool
+    temperature: Array,  # (B,) f32 (ignored where greedy)
+    spec_enabled: Array,  # (B,) bool — False rows force n_acc=0 (plain decode)
+) -> Tuple[Array, Array, dict]:
+    """One speculative chunk over the whole batch.
+
+    ``state``: {"t_pend" (B,) int32, "pos" (B,) int32, "keys" (B,2) uint32,
+    "draft_keys" (B,2) uint32, "cache", "draft_cache"}.
+
+    Returns ``(commit (B, gamma+1) int32, n_keep (B,) int32, new_state)``:
+    row ``b`` committed ``commit[b, :n_keep[b]]`` — the accepted draft prefix
+    plus one correction/bonus token — and the caches/counters in ``new_state``
+    are rewound to exactly that prefix.
+    """
+    t_pend, pos = state["t_pend"], state["pos"]
+    cache, dcache = state["cache"], state["draft_cache"]
+    b = t_pend.shape[0]
+    n_tok = gamma + 1
+    collect = has_recurrent_state(cfg)
+    # Linear (non-ring) caches need no row restore: rejected rows sit beyond
+    # the rewound position counter, are never attended (masked reads), and are
+    # overwritten before re-entering the valid range. Only wrapped ring
+    # buffers lose live entries to rejected writes (DESIGN.md §5).
+    ring = has_ring_buffer(cfg)
+
+    # -- PRNG: one split per row per chunk for the commit token (non-spec
+    # sampled rows thereby consume exactly one split per emitted token — the
+    # plain decode stream), plus an independent draft-proposal stream.
+    splits = jax.vmap(jax.random.split)(state["keys"])  # (B, 2, 2)
+    new_keys, commit_sub = splits[:, 0], splits[:, 1]
+    dsplits = jax.vmap(lambda k: jax.random.split(k, gamma + 3))(
+        state["draft_keys"]
+    )  # (B, gamma+3, 2): carry, accept-uniforms, gamma+1 proposal steps
+    new_draft_keys = dsplits[:, 0]
+    uniform_sub = dsplits[:, 1]
+    prop_subs = dsplits[:, 2:]  # (B, gamma+1, 2) one per draft step
+
+    # -- draft: gamma+1 scanned decode steps of the truncated model ---------
+    if ring:
+        dsnap = snapshot_rows(dcache, pos, n_tok)  # pre-write rows for rollback
+    def draft_step(carry, step_keys):
+        tok, dc, j = carry
+        kw = {"tokens": tok[:, None]}
+        if cfg.family == "vlm":
+            kw["image_emb"] = None
+        logits, dc, _ = forward(
+            cfg, draft_params, **kw, cache=dc, pos=pos + j, logits_mode="last"
+        )
+        lg = logits[:, -1]  # (B, V) draft dist for position pos+j+1
+        sampled = _row_categorical(step_keys, lg / temperature[:, None])
+        prop = jnp.where(greedy, jnp.argmax(lg, axis=-1), sampled).astype(jnp.int32)
+        return (prop, dc, j + 1), (prop, lg, _recurrent_only(dc))
+
+    (_, dcache, _), (props, q_logits, dstacks) = jax.lax.scan(
+        draft_step, (t_pend, dcache, jnp.int32(0)), prop_subs.swapaxes(0, 1)
+    )
+    drafts = props.swapaxes(0, 1)[:, :gamma]  # (B, gamma): d_1..d_gamma
+    q_logits = q_logits.swapaxes(0, 1)  # (B, gamma+1, V); [:, i] ~ d_{i+1}
+
+    # -- verify: ONE chunked forward of the target over the proposals -------
+    if ring:
+        snap = snapshot_rows(cache, pos, n_tok)
+    verify_toks = jnp.concatenate([t_pend[:, None], drafts], axis=1)  # (B, γ+1)
+    kw = {"tokens": verify_toks}
+    if cfg.family == "vlm":
+        kw["image_emb"] = None
+    p_logits, vcache, _ = forward(
+        cfg, params, **kw, cache=cache, pos=pos, logits_mode="all",
+        chunked_decode=True, collect_states=collect,
+    )  # p_logits (B, gamma+1, V); [:, i] = target dist for position pos+i+1
+
+    # -- accept: greedy prefix-match / rejection sampling per row -----------
+    tgt_argmax = jnp.argmax(p_logits[:, :gamma], axis=-1)  # (B, gamma)
+    acc_greedy = drafts == tgt_argmax
+
+    temp = temperature[:, None, None]
+    p_probs = jax.nn.softmax(p_logits[:, :gamma] / temp, axis=-1)
+    q_probs = jax.nn.softmax(q_logits[:, :gamma] / temp, axis=-1)
+    pick = lambda pr: jnp.take_along_axis(pr, drafts[..., None], axis=-1)[..., 0]
+    ratio = pick(p_probs) / jnp.maximum(pick(q_probs), 1e-30)  # (B, gamma)
+    uniforms = jax.vmap(lambda kk: jax.random.uniform(kk, (gamma,)))(uniform_sub)
+    acc_sample = uniforms < ratio
+
+    accepted = jnp.where(greedy[:, None], acc_greedy, acc_sample)
+    accepted &= spec_enabled[:, None]
+    n_acc = jnp.sum(jnp.cumprod(accepted.astype(jnp.int32), axis=1), axis=1)  # (B,)
+
+    # -- commit token: correction at the reject position / bonus at the end -
+    sel = lambda arr, i: jnp.take_along_axis(
+        arr, i.reshape(b, 1, 1), axis=1
+    )[:, 0]
+    p_at = sel(p_logits, n_acc)  # (B, V) target logits at the commit position
+    greedy_next = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
+    # residual max(p-q, 0): q := 0 beyond the proposal range (bonus position)
+    # and for non-speculating rows, which degrades to sampling p directly
+    q_at = jax.nn.softmax(sel(q_logits, jnp.minimum(n_acc, gamma)) / temperature[:, None], axis=-1)
+    q_at = jnp.where(((n_acc >= gamma) | ~spec_enabled)[:, None], 0.0, q_at)
+    resid = jnp.maximum(jax.nn.softmax(p_at / temperature[:, None], axis=-1) - q_at, 0.0)
+    resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-30)
+    spec_next = _row_categorical(commit_sub, jnp.log(jnp.maximum(resid, 1e-38)))
+    # non-spec rows sample the RAW logits row — bit-identical to plain decode
+    plain_next = _row_categorical(commit_sub, p_at / temperature[:, None])
+    sampled_next = jnp.where(spec_enabled, spec_next, plain_next).astype(jnp.int32)
+    t_next = jnp.where(greedy, greedy_next, sampled_next)
+
+    n_keep = n_acc + 1  # committed tokens fed this chunk (t_pend..d_n_acc)
+    commit = jnp.concatenate([drafts, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    commit = jnp.where(
+        jnp.arange(n_tok)[None, :] == n_acc[:, None], t_next[:, None], commit
+    )  # (B, gamma+1): [d_1..d_n_acc, t_next, junk...]
+
+    # -- rollback: positional restore (ring only) + recurrent per-step select
+    if collect:
+        vcache = select_recurrent_target(vcache, n_acc)
+        dcache = select_recurrent_draft(dcache, dstacks, n_acc)
+    if ring:
+        new_cache = restore_rows(vcache, snap, pos, n_tok, n_keep)
+        new_dcache = restore_rows(dcache, dsnap, pos, n_tok, n_keep)
+    else:
+        new_cache, new_dcache = vcache, dcache
+
+    new_state = dict(
+        state,
+        t_pend=t_next,
+        pos=pos + n_keep,
+        keys=new_keys,
+        draft_keys=new_draft_keys,
+        cache=new_cache,
+        draft_cache=new_dcache,
+    )
+    return commit, n_keep, new_state

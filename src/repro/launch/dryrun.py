@@ -105,7 +105,7 @@ def input_specs(
         cfg = _dc.replace(cfg, kv_cache_dtype="int8", stages=None)
     sc: ShapeConfig = SHAPES[shape]
     if sc.name == "long_500k" and not cfg.supports_long_context:
-        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped (DESIGN.md §5)")
+        raise SkipCell(f"{arch} is pure full-attention; long_500k skipped (DESIGN.md §6)")
 
     policy = QuantPolicy(q=quant_q, g=128) if quant_q else None
     p_structs = param_structs(cfg, policy)

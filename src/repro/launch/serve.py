@@ -3,7 +3,7 @@ workload shape: many concurrent decode requests against one weight-resident
 quantized model).
 
 PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 128 \
-    --requests 12 --slots 4 --rate 8
+    --requests 12 --slots 4 --rate 8 --speculate 2:4
 
 Requests enter an admission queue and are continuously batched into a
 ``--slots``-wide decode batch (``repro.infer.Scheduler``): a request joins as
@@ -13,6 +13,13 @@ identical to a solo ``Engine.generate`` call (tests/test_scheduler.py).
 t=0). ``--sequential`` instead serves the same workload as one-shot scanned
 ``generate`` calls in arrival order — the PR 1 fast path, kept as the
 baseline the scheduler is measured against (BENCH_serve.json).
+
+``--speculate q_draft:gamma`` turns decode dispatches into self-speculative
+chunks (DESIGN.md §5): a ``q_draft``-bit truncation of the same BCQ weights
+drafts ``gamma`` tokens per chunk and the full-precision model verifies them
+in one batched forward — greedy output stays token-identical, sampled output
+follows the exact target distribution, and the draft-acceptance rate is
+reported alongside tok/s. Requests opt in per row (every CLI request opts in).
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import MarkovCorpus
-from repro.infer import Engine, Request, Scheduler
+from repro.infer import Engine, Request, Scheduler, SpecConfig
 from repro.models import init_params, reduced
 from repro.quant import QuantPolicy, quantize_params, quantized_bytes
 
@@ -55,11 +62,11 @@ def poisson_arrivals(n, rate, seed=0):
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
 
 
-def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk):
+def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk, speculate=None):
     """Wall-clock serve loop: submit each request at its arrival offset, step
     the scheduler whenever there is work. Returns (scheduler, completions,
     makespan_s) — the scheduler is handed back for utilisation stats."""
-    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk)
+    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk, speculate=speculate)
     done = []
     t0 = time.perf_counter()
     i = 0
@@ -113,7 +120,17 @@ def main() -> None:
     ap.add_argument("--sequential", action="store_true",
                     help="serve with one-shot scanned generate calls instead "
                          "of the continuous-batching scheduler (baseline)")
+    ap.add_argument("--speculate", type=str, default=None, metavar="QD:GAMMA",
+                    help="self-speculative decode chunks from the nested "
+                         "QD-bit draft, GAMMA proposals per chunk (e.g. 2:4); "
+                         "requires --q > QD to actually speed anything up")
     args = ap.parse_args()
+    spec = SpecConfig.parse(args.speculate) if args.speculate else None
+    if spec and not args.q:
+        ap.error("--speculate requires a quantized model (--q > 0)")
+    if spec and args.sequential:
+        ap.error("--speculate drives the continuous-batching scheduler; "
+                 "it cannot be combined with --sequential")
 
     # reduced config sized so quantization actually bites (>=128-dim linears)
     cfg = reduced(get_config(args.arch), d_model=256, n_kv_heads=4,
@@ -128,7 +145,8 @@ def main() -> None:
         params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
         print(f"BCQ q={args.q} g={args.g}: {quantized_bytes(params)/2**20:.2f} MiB")
 
-    engine = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8)
+    headroom = (spec.gamma + 1) if spec else 0
+    engine = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8 + headroom)
     del params  # the engine holds the fused layout; free the unfused tree
     reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen)
     arrivals = poisson_arrivals(args.requests, args.rate, seed=1)
@@ -141,13 +159,22 @@ def main() -> None:
         print("sample:", outs[0].tokens[0, args.prompt_len:])
     else:
         sched, done, dt = drive_continuous(
-            engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk
+            engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk,
+            speculate=spec,
         )
         util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
-        print(f"[continuous] {len(done)} requests, {total_new} tokens in "
+        tag = "continuous"
+        extra = ""
+        if spec:
+            # steps_active counts emitted tokens in spec mode; occupancy is
+            # dispatched row-chunks over capacity
+            util = sched.chunk_rows / max(1, sched.decode_steps * sched.n_slots)
+            tag = f"speculative q'={spec.q_draft} γ={spec.gamma}"
+            extra = f", draft acceptance ~{sched.spec_accept_rate:.0%}"
+        print(f"[{tag}] {len(done)} requests, {total_new} tokens in "
               f"{dt:.2f}s ({total_new/dt:.1f} tok/s on this host, "
               f"{args.slots} slots, chunk={args.chunk}, "
-              f"slot utilisation {util:.0%})")
+              f"slot utilisation {util:.0%}{extra})")
         print("sample:", done[0].new_tokens)
 
 

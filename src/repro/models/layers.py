@@ -20,6 +20,34 @@ from repro.parallel.ctx import constrain_decode_q, constrain_qkv
 Array = jax.Array
 NEG_INF = jnp.finfo(jnp.float32).min
 
+# ---------------------------------------------------------------------------
+# cache-rewind contract (speculative decoding, DESIGN.md §5)
+#
+# Speculative verification writes q'-draft tokens into the cache ahead of
+# acceptance; rejected tokens must be rolled back. Every cache leaf falls in
+# exactly one class, identified by its name:
+#
+# - POSITIONAL (k, v, k_scale, v_scale): writes land at absolute positions.
+#   Rewind = reset the position counter; masked reads (`slot <= pos`, ring
+#   band) guarantee rows beyond the counter are never attended, and the next
+#   chunk overwrites them before they re-enter the valid range. Ring-window
+#   buffers are the one exception: once wrapped, a write at position p
+#   *clobbers* the live entry at p - s_max, so speculative chunks snapshot the
+#   rows they will write and restore the rejected ones
+#   (infer/speculative.py::snapshot_rows/restore_rows).
+# - RECURRENT (h, conv, c, n, m): RG-LRU/xLSTM state folds every consumed
+#   token irreversibly — it cannot be re-masked after the fact. Rewind
+#   requires per-step snapshots: `forward(..., collect_states=True)` makes the
+#   recurrent blocks return their state stacked over the chunk's time axis
+#   (leading axis S), and rollback selects the entry at the commit index.
+# - STATIC (k_img, v_img): projected image memory, never written during
+#   decode; rewind is a no-op.
+# ---------------------------------------------------------------------------
+
+POSITIONAL_CACHE_LEAVES = frozenset({"k", "v", "k_scale", "v_scale"})
+RECURRENT_CACHE_LEAVES = frozenset({"h", "conv", "c", "n", "m"})
+STATIC_CACHE_LEAVES = frozenset({"k_img", "v_img"})
+
 
 # ---------------------------------------------------------------------------
 # init helpers
@@ -218,6 +246,7 @@ def attention(
     pos: Optional[Array] = None,
     window: int = 0,
     kv_override: Optional[Tuple[Array, Array]] = None,
+    chunked: bool = False,
 ) -> Tuple[Array, Optional[dict]]:
     """GQA attention. Returns (out, new_cache).
 
@@ -226,6 +255,10 @@ def attention(
     train            cache=None                 full / chunked-local causal attn
     prefill          cache=empty, pos=0         as train, but also fills the cache
     decode           cache=filled, pos=cur_len  x is (B, 1, D), attends cache
+    chunked decode   chunked=True, cache=filled x is (B, s, D) *mid-sequence*:
+                     the s new tokens attend the whole cache + themselves
+                     (speculative verify — DESIGN.md §5); `pos` may be a
+                     scalar or a per-row (B,) array
     cross            kv_override=(k_mem, v_mem) attends provided memory, no cache
     """
     b, s, _ = x.shape
@@ -263,13 +296,61 @@ def attention(
             out = _local_attention_chunked(q, k, v, window)
         else:
             out = _causal(q, k, v)
-    elif s > 1:
+    elif s > 1 and not chunked:
         # prefill: compute attention over the fresh sequence, then write cache
         if window:
             out = _local_attention_chunked(q, k, v, window)
         else:
             out = _causal(q, k, v)
         new_cache = _cache_write(cache, k, v, pos, window)
+    elif s > 1:
+        # chunked decode (speculative verify): s fresh tokens at absolute
+        # positions pos..pos+s-1 against a *filled* cache. All s rows are
+        # written first, then every token attends the cache under a per-token
+        # positional mask — the same slot layout a step-by-step decode reads,
+        # so the unwrapped case is compute-identical to s single-token steps.
+        # Ring ring-buffers additionally re-expose the entries the chunk's own
+        # writes clobbered (live positions p - s_max once wrapped) as appended
+        # snapshot keys with their original validity band.
+        s_max_c = cache["k"].shape[1]
+        pvec = pos if jnp.ndim(pos) == 1 else jnp.full((b,), pos, jnp.int32)
+        snap = None
+        if window:
+            idx = (pvec[:, None] + jnp.arange(s)) % s_max_c  # (B, s) written slots
+            snap_k = _gather_rows(cache["k"], idx)
+            snap_v = _gather_rows(cache["v"], idx)
+            if "k_scale" in cache:
+                snap_k = _kv_dequantize(snap_k, _gather_rows(cache["k_scale"], idx), x.dtype)
+                snap_v = _kv_dequantize(snap_v, _gather_rows(cache["v_scale"], idx), x.dtype)
+            snap = (snap_k.astype(x.dtype), snap_v.astype(x.dtype))
+        new_cache = _cache_write(cache, k, v, pos, window)
+        ck, cv = new_cache["k"], new_cache["v"]
+        if "k_scale" in new_cache:
+            ck = _kv_dequantize(ck, new_cache["k_scale"], x.dtype)
+            cv = _kv_dequantize(cv, new_cache["v_scale"], x.dtype)
+        q = constrain_decode_q(q)
+        qpos = pvec[:, None] + jnp.arange(s)  # (B, s) per-token absolute pos
+        slot = jnp.arange(s_max_c)
+        if window:
+            stored = _ring_positions(slot[None, None, :], (pvec + s)[:, None, None], s_max_c)
+            valid = (
+                (stored >= 0)
+                & (stored <= qpos[..., None])
+                & (stored > qpos[..., None] - window)
+            )  # (B, s, s_max)
+            # clobbered entries: written slot j previously held position
+            # qpos_j - s_max (if the ring had wrapped); in-band for earlier
+            # tokens of this same chunk
+            op = qpos - s_max_c  # (B, s) original position of snapshot row j
+            valid_snap = (op[:, None, :] >= 0) & (
+                op[:, None, :] > qpos[..., None] - window
+            )  # (B, s_q, s_snap)
+            valid = jnp.concatenate([valid, valid_snap], axis=-1)
+            ck = jnp.concatenate([ck, snap[0]], axis=1)
+            cv = jnp.concatenate([cv, snap[1]], axis=1)
+        else:
+            valid = slot[None, None, :] <= qpos[..., None]  # (B, s, s_max)
+        out = _sdpa(q, ck, cv, valid[:, None])  # mask (B, 1, s, n_keys)
     else:
         # decode: single new token against the cache. The cache is Dh-sharded
         # on `model`; constrain q to match so the score einsum is a local
@@ -309,6 +390,12 @@ def attention(
     return out, new_cache
 
 
+def _gather_rows(buf: Array, idx: Array) -> Array:
+    """Per-row gather of cache rows: buf (B, s_max, ...), idx (B, n) → (B, n, ...)."""
+    ix = idx.reshape(idx.shape + (1,) * (buf.ndim - 2))
+    return jnp.take_along_axis(buf, ix, axis=1)
+
+
 def _kv_quantize(x: Array):
     """(B, s, Hkv, Dh) → int8 codes + per-(token, head) scale (beyond-paper
     int8 KV cache; vLLM-style dynamic per-vector scaling)."""
@@ -334,8 +421,9 @@ def _cache_write(cache: dict, k: Array, v: Array, pos: Array, window: int) -> di
     insertion duplicates the whole carry whenever the loop body also READS a
     slice of it (measured 105 GB/step vs 15 GB for the xs/ys form).
 
-    ``pos`` may also be a (B,) array (slot-batched serving decode): each batch
-    row writes at its own position via a per-row DUS under vmap. That lowers
+    ``pos`` may also be a (B,) array (slot-batched serving decode and
+    speculative verify chunks): each batch row writes its ``s`` fresh rows at
+    its own position via a per-row DUS / ring scatter under vmap. That lowers
     to a batched scatter — costlier than the scalar-start form, accepted on
     the serving path where rows are independent requests by design.
     """
@@ -348,9 +436,26 @@ def _cache_write(cache: dict, k: Array, v: Array, pos: Array, window: int) -> di
         v, v_scale = _kv_quantize(v)
 
     if jnp.ndim(pos) == 1:
-        # slotted decode write (one fresh token per independent row)
-        if s != 1:
-            raise ValueError("per-slot cache writes require single-token decode")
+        # per-row writes (slot-batched serving / speculative chunks): each
+        # batch row writes its s fresh rows at its own position
+        if s >= s_max:
+            raise ValueError(
+                f"per-row cache writes need s({s}) < s_max({s_max}) "
+                "(whole-window overwrite is a lockstep-prefill-only path)"
+            )
+        if window and s > 1:
+            # per-row partial ring fill (speculative verify on a ring buffer)
+            idx = (pos[:, None] + jnp.arange(s)) % s_max  # (B, s)
+
+            def set_rows(buf, new, ix):
+                return buf.at[ix].set(new.astype(buf.dtype))
+
+            write_b = jax.vmap(set_rows, in_axes=(0, 0, 0))
+            out = {"k": write_b(ck, k, idx), "v": write_b(cv, v, idx)}
+            if quantized:
+                out["k_scale"] = write_b(cache["k_scale"], k_scale, idx)
+                out["v_scale"] = write_b(cache["v_scale"], v_scale, idx)
+            return out
         start_b = (pos % s_max if window else pos).astype(jnp.int32)
 
         def dus_row(buf, new, st):

@@ -157,8 +157,14 @@ def apply_block(
     cache: Optional[dict],
     pos: Optional[Array],
     image_emb: Optional[Array],
+    chunked: bool = False,
+    collect: bool = False,
 ) -> Tuple[Array, Optional[dict], Array]:
-    """Returns (h, new_cache, aux_loss)."""
+    """Returns (h, new_cache, aux_loss).
+
+    ``chunked``/``collect`` implement the speculative-verify contract
+    (DESIGN.md §5): multi-token decode against a filled cache, with recurrent
+    state returned as per-step snapshot stacks instead of finals."""
     aux = jnp.float32(0.0)
     if btype in ATTN_BLOCKS:
         window = cfg.window if btype == "local_attn" else 0
@@ -189,7 +195,7 @@ def apply_block(
         else:
             r, new_cache = L.attention(
                 p["attn"], cfg, L.rmsnorm(p["ln1"], h), positions,
-                cache=cache, pos=pos, window=window,
+                cache=cache, pos=pos, window=window, chunked=chunked,
             )
         h = h + r
         x2 = L.rmsnorm(p["ln2"], h)
@@ -201,13 +207,15 @@ def apply_block(
         return h, new_cache, aux
 
     if btype == "rglru":
-        r, new_cache = R.rglru_block(p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache)
+        r, new_cache = R.rglru_block(
+            p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache, collect=collect
+        )
         h = h + r
         h = h + L.mlp_swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
         return h, new_cache, aux
 
     fn = {"mlstm": R.mlstm_block, "slstm": R.slstm_block}[btype]
-    r, new_cache = fn(p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache)
+    r, new_cache = fn(p["mix"], cfg, L.rmsnorm(p["ln1"], h), cache, collect=collect)
     return h + r, new_cache, aux
 
 
@@ -221,6 +229,8 @@ def _apply_stage(
     pos: Optional[Array],
     image_emb: Optional[Array],
     remat: bool,
+    chunked: bool = False,
+    collect: bool = False,
 ) -> Tuple[Array, Optional[dict], Array]:
     def body(carry, xs):
         hh, aux = carry
@@ -229,7 +239,8 @@ def _apply_stage(
         for bi, btype in enumerate(pattern):
             c_in = None if layer_c is None else layer_c[f"b{bi}"]
             hh, c_out, a = apply_block(
-                layer_p[f"b{bi}"], cfg, btype, hh, positions, c_in, pos, image_emb
+                layer_p[f"b{bi}"], cfg, btype, hh, positions, c_in, pos, image_emb,
+                chunked=chunked, collect=collect,
             )
             aux = aux + a
             if layer_c is not None:
@@ -257,8 +268,19 @@ def forward(
     pos: Optional[Array] = None,
     logits_mode: str = "all",  # "all" | "last"
     remat: bool = False,
+    chunked_decode: bool = False,
+    collect_states: bool = False,
 ) -> Tuple[Array, Optional[dict], Array]:
-    """Run the decoder. Returns (logits f32, new_cache or None, aux_loss)."""
+    """Run the decoder. Returns (logits f32, new_cache or None, aux_loss).
+
+    ``chunked_decode=True`` feeds ``s > 1`` fresh tokens *mid-sequence*
+    against a filled cache (speculative verify): every token attends the
+    whole cache plus its intra-chunk predecessors under per-token positional
+    masks, instead of the fresh-sequence-only prefill attention.
+    ``collect_states=True`` additionally makes recurrent blocks return their
+    state stacked over the chunk's time axis (leading ``S`` after the layer
+    axis) so a rollback can select the snapshot at the commit index — the
+    cache-rewind contract of DESIGN.md §5 / models/layers.py."""
     if tokens is not None:
         h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
         b, s = tokens.shape
@@ -280,7 +302,8 @@ def forward(
     for si, (pattern, _) in enumerate(cfg.stages):
         sc = None if cache is None else cache["stages"][si]
         h, nsc, aux = _apply_stage(
-            params["stages"][si], cfg, pattern, h, positions, sc, pos, image_emb, remat
+            params["stages"][si], cfg, pattern, h, positions, sc, pos, image_emb,
+            remat, chunked=chunked_decode, collect=collect_states,
         )
         h = constrain_tokens(h)  # re-anchor: keep batch on dp at stage edges
         aux_total = aux_total + aux

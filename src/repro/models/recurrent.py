@@ -4,7 +4,7 @@ xLSTM cells (mLSTM matrix memory, sLSTM scalar memory).
 All three expose a *parallel* form for train/prefill (scan over time for the
 strictly-recurrent cells, quadratic gated form for mLSTM) and an O(1)-state
 *step* form for decode — which is what makes the ``long_500k`` shape lowerable
-for these families (DESIGN.md §5).
+for these families (DESIGN.md §6).
 
 References: Griffin [arXiv:2402.19427] eqs. (1)-(4); xLSTM [arXiv:2405.04517]
 §2 (sLSTM) and §3 (mLSTM), with exponential-gating log-space stabilisation.
@@ -60,8 +60,11 @@ def _causal_conv1d(x: Array, w: Array, state: Optional[Array]) -> Tuple[Array, A
     return out, xp[:, -(kw - 1) :]
 
 
-def rglru_scan(p: dict, x: Array, h0: Optional[Array]) -> Tuple[Array, Array]:
-    """RG-LRU over a sequence. x: (B,S,W) post-conv. Returns (y, h_last).
+def rglru_scan(p: dict, x: Array, h0: Optional[Array]) -> Tuple[Array, Array, Array]:
+    """RG-LRU over a sequence. x: (B,S,W) post-conv. Returns (y, h_last, hs)
+    where ``hs`` is the full f32 state trajectory (S, B, W) — ``hs[t]`` is the
+    state after consuming token ``t`` (the per-step snapshot stack the
+    speculative cache-rewind contract selects from; DESIGN.md §5).
 
     h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t),
     a_t = exp(c * r_t * log_sigmoid(Λ)), r_t = σ(x_t W_a), i_t = σ(x_t W_i).
@@ -85,7 +88,7 @@ def rglru_scan(p: dict, x: Array, h0: Optional[Array]) -> Tuple[Array, Array]:
     h_last, ys = jax.lax.scan(
         step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2))
     )
-    return ys.transpose(1, 0, 2).astype(x.dtype), h_last
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last, ys
 
 
 def rglru_block(
@@ -93,16 +96,34 @@ def rglru_block(
     cfg: ModelConfig,
     x: Array,
     state: Optional[dict] = None,
+    collect: bool = False,
 ) -> Tuple[Array, Optional[dict]]:
-    """Griffin recurrent block. x: (B,S,D). state: {"h": (B,W), "conv": (B,K-1,W)}."""
+    """Griffin recurrent block. x: (B,S,D). state: {"h": (B,W), "conv": (B,K-1,W)}.
+
+    ``collect=True`` (speculative verify) returns the state stacked over the
+    chunk's time axis instead of the final state — {"h": (S,B,W), "conv":
+    (S,B,K-1,W)} with entry ``t`` the state after consuming token ``t`` — so
+    rollback can select the snapshot at the commit index (DESIGN.md §5).
+    """
     gate = jax.nn.gelu(linear(x, p["w_y"], out_dtype=jnp.float32))
     u = linear(x, p["w_x"])
     conv_state = state["conv"] if state is not None else None
+    if collect and state is None:
+        raise ValueError("collect=True requires a decoding state")
+    conv_in, s_len, kw = u, u.shape[1], p["conv_w"].shape[0]
     u, new_conv = _causal_conv1d(u, p["conv_w"], conv_state)
+    if collect:
+        # conv state after token t = the K-1 inputs ending at t
+        xp = jnp.concatenate([conv_state, conv_in], axis=1)  # (B, S+K-1, W)
+        widx = jnp.arange(s_len)[:, None] + 1 + jnp.arange(kw - 1)[None]
+        conv_stack = xp[:, widx].transpose(1, 0, 2, 3)  # (S, B, K-1, W)
     h0 = state["h"] if state is not None else None
-    y, h_last = rglru_scan(p, u, h0)
+    y, h_last, hs = rglru_scan(p, u, h0)
     out = linear((y.astype(jnp.float32) * gate).astype(x.dtype), p["w_out"])
-    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    if collect:
+        new_state = {"h": hs, "conv": conv_stack}
+    else:
+        new_state = {"h": h_last, "conv": new_conv} if state is not None else None
     return out, new_state
 
 
@@ -236,8 +257,13 @@ def mlstm_block(
     cfg: ModelConfig,
     x: Array,
     state: Optional[dict] = None,
+    collect: bool = False,
 ) -> Tuple[Array, Optional[dict]]:
-    """x: (B,S,D). state: {"c": (B,NH,Dh,Dh), "n": (B,NH,Dh), "m": (B,NH)}."""
+    """x: (B,S,D). state: {"c": (B,NH,Dh,Dh), "n": (B,NH,Dh), "m": (B,NH)}.
+
+    ``collect=True`` (speculative verify; requires a state) stacks the state
+    over the chunk's time axis — entry ``t`` = state after token ``t`` — for
+    rollback selection at the commit index (DESIGN.md §5)."""
     b, s, d = x.shape
     nh = cfg.n_heads
     inner = int(d * cfg.mlstm_proj_factor)
@@ -251,6 +277,8 @@ def mlstm_block(
     i_gate = linear(u, p["w_i"], out_dtype=jnp.float32).transpose(0, 2, 1)  # (B,NH,S)
     f_gate = linear(u, p["w_f"], out_dtype=jnp.float32).transpose(0, 2, 1)
 
+    if collect and state is None:
+        raise ValueError("collect=True requires a decoding state")
     if state is None and s > 1:
         if s <= MLSTM_CHUNK:
             h = _mlstm_parallel(q, k, v, i_gate, f_gate)  # (B,NH,S,Dh)
@@ -276,7 +304,8 @@ def mlstm_block(
             num = jnp.einsum("bhd,bhde->bhe", q_t, c)
             den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n)), jnp.exp(-m_new))
             h_t = num / den[..., None]
-            return (c, n, m_new), h_t
+            out_t = (h_t, (c, n, m_new)) if collect else h_t
+            return (c, n, m_new), out_t
 
         seq = (
             q.transpose(2, 0, 1, 3),
@@ -285,9 +314,14 @@ def mlstm_block(
             i_gate.transpose(2, 0, 1),
             f_gate.transpose(2, 0, 1),
         )
-        (c, n, m), hs = jax.lax.scan(step, (c, n, m), seq)
+        (c, n, m), ys = jax.lax.scan(step, (c, n, m), seq)
+        if collect:
+            hs, (cs, ns, ms) = ys
+            new_state = {"c": cs, "n": ns, "m": ms}  # (S, B, NH, ...) stacks
+        else:
+            hs = ys
+            new_state = {"c": c, "n": n, "m": m}
         h = hs.transpose(1, 2, 0, 3)  # (B,NH,S,Dh)
-        new_state = {"c": c, "n": n, "m": m}
 
     h = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
     h = h + p["skip_scale"][None, None] * u.astype(jnp.float32)
@@ -324,8 +358,12 @@ def slstm_block(
     cfg: ModelConfig,
     x: Array,
     state: Optional[dict] = None,
+    collect: bool = False,
 ) -> Tuple[Array, Optional[dict]]:
-    """x: (B,S,D). state: {"h","c","n","m": (B,NH,Dh)}. Strictly sequential."""
+    """x: (B,S,D). state: {"h","c","n","m": (B,NH,Dh)}. Strictly sequential.
+
+    ``collect=True`` (speculative verify; requires a state) stacks the state
+    over the chunk's time axis for rollback selection (DESIGN.md §5)."""
     b, s, d = x.shape
     nh = cfg.n_heads
     dh = d // nh
@@ -356,11 +394,19 @@ def slstm_block(
         c = fg * c + ig * z
         n = fg * n + ig
         h = o * c / jnp.maximum(n, 1e-6)
-        return (h, c, n, m_new), h
+        out_t = (h, (h, c, n, m_new)) if collect else h
+        return (h, c, n, m_new), out_t
 
+    if collect and state is None:
+        raise ValueError("collect=True requires a decoding state")
     seq = tuple(pre[g].transpose(1, 0, 2, 3) for g in ("z", "i", "f", "o"))
-    (h, c, n, m), hs = jax.lax.scan(step, (st["h"], st["c"], st["n"], st["m"]), seq)
+    (h, c, n, m), ys = jax.lax.scan(step, (st["h"], st["c"], st["n"], st["m"]), seq)
+    if collect:
+        hs, (hh, cs, ns, ms) = ys
+        new_state = {"h": hh, "c": cs, "n": ns, "m": ms}  # (S, B, NH, Dh) stacks
+    else:
+        hs = ys
+        new_state = {"h": h, "c": c, "n": n, "m": m} if state is not None else None
     y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
     out = linear(y, p["w_out"])
-    new_state = {"h": h, "c": c, "n": n, "m": m} if state is not None else None
     return out, new_state

@@ -1,6 +1,6 @@
 """PartitionSpec rules for every parameter / cache / batch tensor.
 
-Strategy (DESIGN.md §6) — everything is expressed in axis *names* so meshes of
+Strategy (DESIGN.md §7) — everything is expressed in axis *names* so meshes of
 any size reuse the same rules:
 
 - batch (DP) over ``dp = ("pod", "data")`` (or ``("data",)`` single-pod)

@@ -5,6 +5,7 @@ from repro.quant.quantize import (
     quantize_params,
     quantized_structs,
     quantized_bytes,
+    truncate_params,
 )
 
 __all__ = [
@@ -12,4 +13,5 @@ __all__ = [
     "quantize_params",
     "quantized_structs",
     "quantized_bytes",
+    "truncate_params",
 ]

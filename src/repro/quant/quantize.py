@@ -128,6 +128,33 @@ def quantize_params(params, policy: QuantPolicy):
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
+def truncate_params(params, q_draft: int):
+    """Truncate every QuantizedTensor leaf to its nested ``q_draft``-bit view.
+
+    The cheap-draft side of self-speculative decoding (infer/speculative.py):
+    packed planes and scales are sliced to the first ``min(q_draft, q)``
+    (:meth:`QuantizedTensor.truncate` — BCQ's planes are successive residual
+    refinements, so the prefix is itself a valid lower-bit model). Every other
+    leaf — norms, embeddings, dense (unquantized) linears — is returned *as
+    is*, shared by reference with the full-precision tree: the draft costs no
+    extra weight memory beyond what the slices materialise.
+
+    Works on fused decode trees too (truncation slices the q axis, which
+    fusion never touches), so the engine truncates its post-`fuse` params.
+    """
+    if q_draft < 1:
+        raise ValueError(f"q_draft must be >= 1, got {q_draft}")
+
+    def visit(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return leaf.truncate(min(q_draft, leaf.q))
+        return leaf
+
+    return jax.tree.map(
+        visit, params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+
+
 def quantized_structs(param_structs, policy: QuantPolicy):
     """Same tree surgery, but on ShapeDtypeStructs (no data, no compute)."""
 
