@@ -28,6 +28,21 @@ the draft acceptance rate alongside tok/s. Programmatic use::
     sched = Scheduler(eng, n_slots=4, speculate=SpecConfig(2, 4))
     sched.submit(Request(prompt, max_new_tokens=16, temperature=0.7))
     completions = sched.run()   # greedy rows token-identical to solo generate()
+
+Tensor-parallel serving (DESIGN.md §7) shards the same engine over an N-way
+``model`` mesh — weights column/row-parallel, KV caches kv-head-sharded,
+greedy tokens bit-identical to the single-device engine::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \\
+        --q 4 --g 64 --requests 12 --slots 4 --tp 4
+
+    from repro.parallel.tp import make_tp_mesh
+    eng = Engine(cfg, params, max_seq=64, mesh=make_tp_mesh(4))
+    # generate/Scheduler/speculate all work unchanged on the sharded engine
+
+(group size caveat: row-parallel weights need ``(k/g) % tp == 0`` so scale
+groups shard with their k-rows — the engine raises naming the leaf if not;
+``examples/serve_quantized.py --tp N`` demos the same end-to-end.)
 """
 
 import jax.numpy as jnp

@@ -37,6 +37,7 @@ is the escape hatch.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -73,18 +74,35 @@ class Engine:
         max_seq: int = 2048,
         embed_fn=None,
         fuse: bool = True,
+        mesh=None,
     ):
         """``embed_fn(tokens (B,1) int32) → (B,1,D)`` is required for
         embedding-input (modality-stub) models to feed sampled codes back in —
         it stands in for the stubbed frontend (e.g. EnCodec codebook embed).
 
         ``fuse=False`` keeps the unfused per-projection weight layout
-        (debugging / layouts the fuser declines are left unfused anyway)."""
+        (debugging / layouts the fuser declines are left unfused anyway).
+
+        ``mesh`` (a 1-D mesh with a ``model`` axis — ``parallel.tp.
+        make_tp_mesh``) runs every forward tensor-parallel under ``shard_map``
+        (DESIGN.md §7): weights are placed column/row-parallel, KV caches
+        shard their kv-head dim, and all decode/serve/speculative paths
+        consume the shards; tokens are identical to the single-device engine
+        for greedy decoding, logits equal up to psum reassociation."""
         self.cfg = cfg
         self.params = fuse_decode_projections(cfg, params) if fuse else params
         self.max_seq = max_seq
         self.embed_fn = embed_fn
         self._unit_cache = None  # lazy batch-1 prefill template (admit_slot)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.parallel.tp import shard_model
+
+            self.params, self._tp = shard_model(cfg, self.params, mesh)
+            fwd = self._tp.forward
+        else:
+            self._tp = None
+            fwd = functools.partial(forward, cfg)
 
         def _prefill(params, tokens, image_emb, cache):
             kw = (
@@ -94,8 +112,8 @@ class Engine:
             )
             if cfg.family == "vlm":
                 kw["image_emb"] = image_emb
-            logits, cache, _ = forward(
-                cfg, params, **kw, cache=cache, pos=jnp.int32(0), logits_mode="last"
+            logits, cache, _ = fwd(
+                params, **kw, cache=cache, pos=jnp.int32(0), logits_mode="last"
             )
             return logits, cache
 
@@ -103,8 +121,8 @@ class Engine:
             kw = {"tokens": tok} if cfg.input_kind == "tokens" else {"embeddings": tok}
             if cfg.family == "vlm":
                 kw["image_emb"] = None
-            logits, cache, _ = forward(
-                cfg, params, **kw, cache=cache, pos=pos, logits_mode="last"
+            logits, cache, _ = fwd(
+                params, **kw, cache=cache, pos=pos, logits_mode="last"
             )
             return logits, cache
 
@@ -265,6 +283,7 @@ class Engine:
                 commit, n_keep, ns = spec_chunk(
                     cfg, params, draft_params, state, gamma=gamma,
                     greedy=greedy, temperature=temperature, spec_enabled=spec_on,
+                    fwd=fwd,
                 )
                 emit_n = jnp.where(active, jnp.minimum(n_keep, remaining), 0)
                 valid = jnp.arange(gamma + 1)[None, :] < emit_n[:, None]
@@ -329,6 +348,7 @@ class Engine:
                 commit, n_keep, ns = spec_chunk(
                     cfg, params, draft_params, state, gamma=gamma,
                     greedy=greedy_vec, temperature=temp_vec, spec_enabled=spec_on,
+                    fwd=fwd,
                 )
 
                 def wrow(bufrow, vec, start, act):
@@ -378,6 +398,13 @@ class Engine:
         self._draft_params: dict = {}  # q_draft -> truncated param tree
         self._slot_spec: Optional[SpecConfig] = None  # set by init_slots
 
+    def _make_cache(self, batch: int):
+        """A fresh decode cache, TP-sharded (kv-heads over `model`) when the
+        engine runs on a mesh so the jitted paths see sharded inputs instead
+        of paying a reshard on entry."""
+        cache = init_cache(self.cfg, batch, self.max_seq)
+        return cache if self._tp is None else self._tp.shard_cache(cache)
+
     # -- speculative decoding (infer/speculative.py) -------------------------
 
     def draft_params(self, q_draft: int):
@@ -385,7 +412,13 @@ class Engine:
         (zero extra solve; norms/embeddings/dense leaves shared by reference).
         Cached per ``q_draft`` for the engine's lifetime."""
         if q_draft not in self._draft_params:
-            self._draft_params[q_draft] = truncate_params(self.params, q_draft)
+            draft = truncate_params(self.params, q_draft)
+            if self._tp is not None:
+                # plane truncation slices the q axis, never a sharded dim, so
+                # the full tree's placement applies verbatim; re-commit so the
+                # draft enters jit sharded even if the slice fell off-device
+                draft = self._tp.place_params(draft)
+            self._draft_params[q_draft] = draft
         return self._draft_params[q_draft]
 
     def _validate_spec(self, spec: SpecConfig) -> None:
@@ -441,7 +474,7 @@ class Engine:
                 "token-identity (use one-shot Engine.generate instead)"
             )
         slots = {
-            "cache": init_cache(self.cfg, n_slots, self.max_seq),
+            "cache": self._make_cache(n_slots),
             "logits": jnp.zeros((n_slots, self.cfg.vocab), jnp.float32),
             "pos": jnp.zeros((n_slots,), jnp.int32),
             "keys": jnp.zeros((n_slots, 2), jnp.uint32),
@@ -453,7 +486,7 @@ class Engine:
         self._slot_spec = speculate
         if speculate is not None:
             self._validate_spec(speculate)
-            slots["draft_cache"] = init_cache(self.cfg, n_slots, self.max_seq)
+            slots["draft_cache"] = self._make_cache(n_slots)
             slots["t_pend"] = jnp.zeros((n_slots,), jnp.int32)
             slots["spec"] = jnp.zeros((n_slots,), bool)
             slots["draft_keys"] = jnp.zeros((n_slots, 2), jnp.uint32)
@@ -498,7 +531,7 @@ class Engine:
             # one zeroed batch-1 cache per engine: _prefill is purely
             # functional (no donation), so the template is reusable and the
             # admission hot path skips a full max_seq cache alloc+zero
-            self._unit_cache = init_cache(self.cfg, 1, self.max_seq)
+            self._unit_cache = self._make_cache(1)
         logits, cache1 = self._prefill(self.params, prompt, None, self._unit_cache)
         greedy = temperature <= 0
         args = (
@@ -577,7 +610,7 @@ class Engine:
         ``spec_stats`` reports the draft acceptance rate."""
         cfg = self.cfg
         b, s = prompt_tokens.shape[:2]
-        cache = init_cache(cfg, b, self.max_seq)
+        cache = self._make_cache(b)
         logits, cache = self._prefill(
             self.params, jnp.asarray(prompt_tokens), image_emb, cache
         )
@@ -592,7 +625,7 @@ class Engine:
                     f"exceeds max_seq={self.max_seq}"
                 )
             draft = self.draft_params(speculate.q_draft)
-            dcache = init_cache(cfg, b, self.max_seq)
+            dcache = self._make_cache(b)
             _, dcache = self._prefill(
                 draft, jnp.asarray(prompt_tokens), image_emb, dcache
             )

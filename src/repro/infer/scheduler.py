@@ -32,6 +32,14 @@ across more decode steps (highest host throughput). Completion detection is
 host-side (the per-request budget is known), deactivation is device-side (the
 active mask inside the scan), so a mid-chunk finish never emits extra tokens.
 
+**Tensor-parallel serving** (``Scheduler(Engine(cfg, params, mesh=...))``,
+DESIGN.md §7): the scheduler is sharding-agnostic — slots, admission and
+budgets live on the host exactly as below, while every engine dispatch it
+drives (admission prefill, decode chunks, speculative chunks) consumes
+TP-sharded weights and KV caches under ``shard_map``. Greedy completions
+stay bit-identical to the single-device engine; sampled completions remain
+solo-identical *within* the same sharded engine (tests/test_tp_serve.py).
+
 **Speculative serving** (``Scheduler(engine, speculate=SpecConfig(...))``,
 DESIGN.md §5): decode dispatches become draft-verify-accept chunks — each
 chunk commits 1..gamma+1 tokens per row instead of exactly one. Requests opt

@@ -40,6 +40,7 @@ opting in per request).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -240,17 +241,24 @@ def spec_chunk(
     greedy: Array,  # (B,) bool
     temperature: Array,  # (B,) f32 (ignored where greedy)
     spec_enabled: Array,  # (B,) bool — False rows force n_acc=0 (plain decode)
+    fwd=None,  # forward with cfg bound; TP engines pass their shard_map'd one
 ) -> Tuple[Array, Array, dict]:
     """One speculative chunk over the whole batch.
 
     ``state``: {"t_pend" (B,) int32, "pos" (B,) int32, "keys" (B,2) uint32,
     "draft_keys" (B,2) uint32, "cache", "draft_cache"}.
 
+    ``fwd(params, **kw)`` defaults to ``models.forward`` with ``cfg`` bound;
+    a tensor-parallel engine passes its shard_map wrapper instead so draft
+    scan and batched verify both consume sharded params/caches.
+
     Returns ``(commit (B, gamma+1) int32, n_keep (B,) int32, new_state)``:
     row ``b`` committed ``commit[b, :n_keep[b]]`` — the accepted draft prefix
     plus one correction/bonus token — and the caches/counters in ``new_state``
     are rewound to exactly that prefix.
     """
+    if fwd is None:
+        fwd = functools.partial(forward, cfg)
     t_pend, pos = state["t_pend"], state["pos"]
     cache, dcache = state["cache"], state["draft_cache"]
     b = t_pend.shape[0]
@@ -282,8 +290,8 @@ def spec_chunk(
         kw = {"tokens": tok[:, None]}
         if cfg.family == "vlm":
             kw["image_emb"] = None
-        logits, dc, _ = forward(
-            cfg, draft_params, **kw, cache=dc, pos=pos + j, logits_mode="last"
+        logits, dc, _ = fwd(
+            draft_params, **kw, cache=dc, pos=pos + j, logits_mode="last"
         )
         lg = logits[:, -1]  # (B, V) draft dist for position pos+j+1
         sampled = _row_categorical(step_keys, lg / temperature[:, None])
@@ -303,8 +311,8 @@ def spec_chunk(
     kw = {"tokens": verify_toks}
     if cfg.family == "vlm":
         kw["image_emb"] = None
-    p_logits, vcache, _ = forward(
-        cfg, params, **kw, cache=cache, pos=pos, logits_mode="all",
+    p_logits, vcache, _ = fwd(
+        params, **kw, cache=cache, pos=pos, logits_mode="all",
         chunked_decode=True, collect_states=collect,
     )  # p_logits (B, gamma+1, V); [:, i] = target dist for position pos+i+1
 

@@ -1,0 +1,49 @@
+"""Pre-jax-import host device forcing for tensor-parallel CLI entry points.
+
+The host (CPU) platform's device count is fixed the moment the jax backend
+initialises, so ``--tp N`` launchers must set
+``--xla_force_host_platform_device_count`` BEFORE their first jax import —
+the same constraint ``launch/dryrun.py`` documents. This module is
+deliberately jax-free so entry points can import it first.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional
+
+
+def _peek_int_flag(argv: List[str], flag: str) -> Optional[int]:
+    """Value of ``--flag N`` or ``--flag=N`` from raw argv, else None."""
+    for i, tok in enumerate(argv):
+        if tok == flag:
+            try:
+                return int(argv[i + 1])
+            except (IndexError, ValueError):
+                return None
+        if tok.startswith(flag + "="):
+            try:
+                return int(tok.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def force_host_devices(n: int) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS unless
+    a device count is already forced (an unrelated pre-existing XLA_FLAGS
+    value is preserved, not clobbered). Call before the first jax import."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+def force_host_devices_for_tp(argv: Optional[List[str]] = None) -> None:
+    """Peek at ``--tp`` and force that many host devices if none are forced
+    yet. Call before the first jax import; argparse re-validates later."""
+    n = _peek_int_flag(sys.argv if argv is None else argv, "--tp")
+    if n is not None and n > 1:
+        force_host_devices(n)

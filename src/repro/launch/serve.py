@@ -5,6 +5,12 @@ quantized model).
 PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 128 \
     --requests 12 --slots 4 --rate 8 --speculate 2:4
 
+PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --q 4 --g 64 \
+    --requests 12 --slots 4 --tp 4     # tensor-parallel serving (g must keep
+                                       # (k/g) divisible by tp for the
+                                       # row-parallel weights; the engine
+                                       # errors loudly naming the leaf else)
+
 Requests enter an admission queue and are continuously batched into a
 ``--slots``-wide decode batch (``repro.infer.Scheduler``): a request joins as
 soon as a slot frees up, finishes on its own budget, and its tokens are
@@ -20,12 +26,27 @@ drafts ``gamma`` tokens per chunk and the full-precision model verifies them
 in one batched forward — greedy output stays token-identical, sampled output
 follows the exact target distribution, and the draft-acceptance rate is
 reported alongside tok/s. Requests opt in per row (every CLI request opts in).
+
+``--tp N`` serves tensor-parallel (DESIGN.md §7): weights are placed
+column/row-parallel over an N-way ``model`` mesh under ``shard_map``, KV
+caches shard their kv-head dim, and greedy tokens stay identical to the
+single-device engine. On a CPU host the launcher forces N placeholder
+devices (the flag below must be set before jax initialises, hence the
+pre-import peek — same constraint launch/dryrun.py documents).
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+from repro.launch._hostdev import force_host_devices_for_tp
+
+if __name__ == "__main__":
+    # CLI only (python -m repro.launch.serve): must run before the first jax
+    # import. Library imports of this module (benchmarks pull build_requests)
+    # must NOT sniff the host program's argv or mutate its XLA topology.
+    force_host_devices_for_tp()
 
 import jax
 import numpy as np
@@ -124,7 +145,14 @@ def main() -> None:
                     help="self-speculative decode chunks from the nested "
                          "QD-bit draft, GAMMA proposals per chunk (e.g. 2:4); "
                          "requires --q > QD to actually speed anything up")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard weights/KV over an "
+                         "N-way model mesh under shard_map (greedy tokens "
+                         "identical to --tp 1; CPU hosts get N forced "
+                         "placeholder devices)")
     args = ap.parse_args()
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
     spec = SpecConfig.parse(args.speculate) if args.speculate else None
     if spec and not args.q:
         ap.error("--speculate requires a quantized model (--q > 0)")
@@ -145,8 +173,17 @@ def main() -> None:
         params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
         print(f"BCQ q={args.q} g={args.g}: {quantized_bytes(params)/2**20:.2f} MiB")
 
+    mesh = None
+    if args.tp > 1:
+        from repro.parallel.tp import make_tp_mesh
+
+        mesh = make_tp_mesh(args.tp)
+        print(f"tensor-parallel: {args.tp}-way model mesh over "
+              f"{[str(d) for d in mesh.devices.flat]}")
+
     headroom = (spec.gamma + 1) if spec else 0
-    engine = Engine(cfg, params, max_seq=args.prompt_len + args.gen + 8 + headroom)
+    engine = Engine(cfg, params, mesh=mesh,
+                    max_seq=args.prompt_len + args.gen + 8 + headroom)
     del params  # the engine holds the fused layout; free the unfused tree
     reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen)
     arrivals = poisson_arrivals(args.requests, args.rate, seed=1)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.qtensor import QuantizedTensor
 from repro.kernels.ops import linear, linear_fused
 from repro.models.config import ModelConfig
-from repro.parallel.ctx import constrain_decode_q, constrain_qkv
+from repro.parallel.ctx import constrain_decode_q, constrain_qkv, psum_partial
 
 Array = jax.Array
 NEG_INF = jnp.finfo(jnp.float32).min
@@ -275,7 +275,8 @@ def attention(
     if kv_override is not None:
         k_mem, v_mem = kv_override
         out = _sdpa(q, k_mem, v_mem, None)
-        return linear(out.reshape(b, s, cfg.q_dim), p["wo"]), cache
+        # wo is row-parallel under TP: local heads contract to a partial (B,S,D)
+        return psum_partial(linear(out.reshape(b, s, cfg.q_dim), p["wo"])), cache
 
     if k is None:
         k = linear(x, p["wk"])
@@ -386,7 +387,9 @@ def attention(
                 valid = slot[None, :] <= pb
             mask = valid[:, None, None, :]
         out = _sdpa(q, ck, cv, mask)
-    out = linear(out.reshape(b, s, cfg.q_dim), p["wo"])
+    # wo is row-parallel under TP (heads → q_dim local shards): psum the
+    # partial sums; no-op outside a TP shard_map region
+    out = psum_partial(linear(out.reshape(b, s, cfg.q_dim), p["wo"]))
     return out, new_cache
 
 
@@ -529,4 +532,5 @@ def mlp_swiglu(p: dict, x: Array) -> Array:
     else:
         gate = linear(x, p["w_gate"])
         up = linear(x, p["w_up"])
-    return linear(jax.nn.silu(gate) * up, p["w_down"])
+    # w_down is row-parallel under TP (d_ff shards): psum the partials
+    return psum_partial(linear(jax.nn.silu(gate) * up, p["w_down"]))

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels.ops import linear
 from repro.models import layers as L
-from repro.parallel.ctx import constrain_tokens
+from repro.parallel.ctx import all_gather_cols, constrain_tokens
 from repro.models import moe as M
 from repro.models import recurrent as R
 from repro.models.config import ModelConfig
@@ -312,6 +312,8 @@ def forward(
     h = L.rmsnorm(params["final_norm"], h)
     if logits_mode == "last":
         h = h[:, -1:]
-    logits = linear(h, params["lm_head"], out_dtype=jnp.float32)
+    # lm_head is column-parallel under TP (vocab shards): gather the full
+    # (B, S, V) logits so sampling sees every token; no-op otherwise
+    logits = all_gather_cols(linear(h, params["lm_head"], out_dtype=jnp.float32))
     new_cache = None if cache is None else {"stages": tuple(new_stages)}
     return logits, new_cache, aux_total

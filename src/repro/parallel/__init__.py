@@ -5,6 +5,7 @@ from repro.parallel.sharding import (
     MeshAxes,
     batch_specs,
     cache_specs,
+    decode_tp_axes,
     param_specs,
     single_pod_axes,
     multi_pod_axes,
@@ -14,6 +15,7 @@ __all__ = [
     "MeshAxes",
     "batch_specs",
     "cache_specs",
+    "decode_tp_axes",
     "param_specs",
     "single_pod_axes",
     "multi_pod_axes",

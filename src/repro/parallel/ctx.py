@@ -11,13 +11,63 @@ No-ops when there is no ambient mesh (CPU smoke tests, single-device runs).
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 from jax.sharding import PartitionSpec as P
 
 _DP_AXES = ("pod", "data")
 
+# ---------------------------------------------------------------------------
+# shard_map TP trace context (set by parallel/tp.py while tracing its
+# shard_map body). Inside that region every device holds *local* weight and
+# KV shards, so the model code must (a) all-reduce row-parallel partial sums
+# itself and (b) NOT emit with_sharding_constraints (GSPMD annotations are
+# meaningless on manual-mode values). The helpers below are no-ops outside a
+# TP region, so training / single-device serving paths are untouched.
+# ---------------------------------------------------------------------------
+
+_TP_AXIS_STACK: list = []
+
+
+def tp_axis():
+    """Mesh-axis name of the innermost active TP shard_map region, or None."""
+    return _TP_AXIS_STACK[-1] if _TP_AXIS_STACK else None
+
+
+@contextlib.contextmanager
+def tp_shard_region(axis_name: str):
+    """Mark (at trace time) that model code runs inside a TP shard_map body."""
+    _TP_AXIS_STACK.append(axis_name)
+    try:
+        yield
+    finally:
+        _TP_AXIS_STACK.pop()
+
+
+def psum_partial(x: jax.Array) -> jax.Array:
+    """All-reduce a row-parallel partial sum (O / down projections) inside a
+    TP region; identity everywhere else."""
+    ax = tp_axis()
+    if ax is None:
+        return x
+    return jax.lax.psum(x, ax)
+
+
+def all_gather_cols(x: jax.Array) -> jax.Array:
+    """Concatenate column-parallel output shards (vocab-sharded logits) along
+    the last dim inside a TP region; identity everywhere else."""
+    ax = tp_axis()
+    if ax is None:
+        return x
+    return jax.lax.all_gather(x, ax, axis=x.ndim - 1, tiled=True)
+
 
 def _ambient_axes():
+    if tp_axis() is not None:
+        # inside a shard_map body: values are device-local (manual mode);
+        # GSPMD sharding constraints do not apply there
+        return None
     try:
         mesh = jax.sharding.get_abstract_mesh()
     except Exception:

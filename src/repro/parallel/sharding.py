@@ -69,6 +69,14 @@ def multi_pod_axes(pod: int = 2, data: int = 16, model: int = 16) -> MeshAxes:
     )
 
 
+def decode_tp_axes(model: int) -> MeshAxes:
+    """Pure tensor-parallel decode mesh: one `model` axis, no DP/FSDP.
+
+    The serving engine's shard_map path (parallel/tp.py) uses this — batch
+    rows are request slots, never sharded; only weights/caches split."""
+    return MeshAxes((), None, "model", (("model", model),))
+
+
 def _div(n: int, by: int) -> bool:
     return by > 0 and n % by == 0
 
@@ -219,25 +227,36 @@ def param_specs(cfg: ModelConfig, ax: MeshAxes) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _cache_block_specs(cfg: ModelConfig, ax: MeshAxes, btype: str, batch: int) -> dict:
-    b_ax = ax.dp if _div(batch, ax.data_size) else None
+def _cache_block_specs(
+    cfg: ModelConfig, ax: MeshAxes, btype: str, batch: int, layout: str = "dh"
+) -> dict:
+    b_ax = ax.dp if (ax.dp and _div(batch, ax.data_size)) else None
     m = ax.model
-    if btype in ("attn", "attn_moe", "local_attn"):
-        # NOTE: sequence-sharding the cache over `model` (flash-decoding-style
-        # split-K) was tried and REJECTED: a dynamic-position update into a
-        # sequence-sharded dim makes GSPMD reshard the whole cache every step
-        # (measured 179 GB/chip/step on llama3.2-3b decode_32k). Dh-sharding
-        # keeps writes local; the per-layer score partial-sum is the cost.
-        dh_ax = _maybe(m, cfg.d_head, ax.size(m))
-        s = P(None, b_ax, None, None, dh_ax)  # (R, B, S, Hkv, Dh)
+    if btype in ("attn", "attn_moe", "local_attn", "cross"):
+        # Two KV layouts (DESIGN.md §7):
+        # - "dh" (GSPMD decode/training): head_dim over `model`. Sequence-
+        #   sharding (flash-decoding-style split-K) was tried and REJECTED: a
+        #   dynamic-position update into a sequence-sharded dim makes GSPMD
+        #   reshard the whole cache every step (measured 179 GB/chip/step on
+        #   llama3.2-3b decode_32k). Dh-sharding keeps writes local; the
+        #   per-layer score partial-sum is the cost.
+        # - "heads" (shard_map TP, parallel/tp.py): kv-head dim over `model`,
+        #   matching the column-parallel QKV projections' local heads — rope
+        #   rotates (i, i+Dh/2) pairs, so splitting Dh would break the local
+        #   rotary compute that head-sharding keeps collective-free.
+        if layout == "heads":
+            h_ax = _maybe(m, cfg.n_kv_heads, ax.size(m))
+            s = P(None, b_ax, None, h_ax, None)  # (R, B, S, Hkv, Dh)
+            sc = P(None, b_ax, None, h_ax)  # (R, B, S, Hkv) scales
+        else:
+            dh_ax = _maybe(m, cfg.d_head, ax.size(m))
+            s = P(None, b_ax, None, None, dh_ax)
+            sc = P(None, b_ax, None, None)
+        if btype == "cross":
+            return {"k_img": s, "v_img": s}
         if cfg.kv_cache_dtype == "int8":
-            sc = P(None, b_ax, None, None)  # (R, B, S, Hkv) scales
             return {"k": s, "v": s, "k_scale": sc, "v_scale": sc}
         return {"k": s, "v": s}
-    if btype == "cross":
-        dh_ax = _maybe(m, cfg.d_head, ax.size(m))
-        s = P(None, b_ax, None, None, dh_ax)
-        return {"k_img": s, "v_img": s}
     if btype == "rglru":
         w_ax = _maybe(m, cfg.lru_width, ax.size(m))
         return {
@@ -259,10 +278,17 @@ def _cache_block_specs(cfg: ModelConfig, ax: MeshAxes, btype: str, batch: int) -
     raise ValueError(btype)
 
 
-def cache_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
+def cache_specs(
+    cfg: ModelConfig, ax: MeshAxes, batch: int, layout: str = "dh"
+) -> dict:
+    """Spec tree mirroring ``init_cache``. ``layout`` picks the KV split:
+    ``"dh"`` (head_dim over model — GSPMD decode constraint path) or
+    ``"heads"`` (kv-head dim over model — the shard_map TP path)."""
+    if layout not in ("dh", "heads"):
+        raise ValueError(f"unknown cache layout {layout!r}")
     stages = tuple(
         {
-            f"b{bi}": _cache_block_specs(cfg, ax, bt, batch)
+            f"b{bi}": _cache_block_specs(cfg, ax, bt, batch, layout)
             for bi, bt in enumerate(pattern)
         }
         for pattern, _ in cfg.stages
@@ -277,7 +303,7 @@ def cache_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
 
 def batch_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
     """Specs for the input batch dict used by train/prefill/decode steps."""
-    b_ax = ax.dp if _div(batch, ax.data_size) else None
+    b_ax = ax.dp if (ax.dp and _div(batch, ax.data_size)) else None
     out = {}
     if cfg.input_kind == "tokens":
         out["tokens"] = P(b_ax, None)
@@ -291,7 +317,7 @@ def batch_specs(cfg: ModelConfig, ax: MeshAxes, batch: int) -> dict:
 
 
 def logits_spec(cfg: ModelConfig, ax: MeshAxes, batch: int) -> P:
-    b_ax = ax.dp if _div(batch, ax.data_size) else None
+    b_ax = ax.dp if (ax.dp and _div(batch, ax.data_size)) else None
     v_ax = _maybe(ax.model, cfg.vocab, ax.size(ax.model))
     return P(b_ax, None, v_ax)
 

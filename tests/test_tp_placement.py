@@ -1,0 +1,322 @@
+"""TP placement + QuantizedTensor spec derivation properties (ISSUE 4).
+
+Three layers of guarantees:
+
+1. `qt_specs_like` (generic GSPMD rules): for EVERY config in `configs/`,
+   every quantized leaf derives packed/scales specs whose sharded dims divide
+   their mesh axes exactly, or fall back to replicated — never a misaligned
+   shard.
+2. `tp_param_specs` (the strict shard_map rules): every leaf of a real
+   (fused, quantized) decode tree gets a spec; dims that MUST shard divide
+   exactly — non-divisibility raises, naming the leaf (`test_tp_serve.py`
+   holds the engine-level versions of those error paths).
+3. `shard_model` round-trip: a device_get of the placed tree is bit-identical
+   to the unsharded tree (fused leaves modulo the documented column
+   re-interleave, which is itself a permutation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+# hypothesis is an optional test extra (see pyproject [test]); deterministic
+# fallbacks below keep coverage on minimal installs (same pattern as test_bcq)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.qtensor import QuantizedTensor
+from repro.models import init_params, reduced
+from repro.models.config import ModelConfig
+from repro.parallel import cache_specs, decode_tp_axes, param_specs, single_pod_axes
+from repro.parallel.sharding import qt_specs_like
+from repro.parallel.tp import (
+    _interleave_perm,
+    make_tp_mesh,
+    relayout_fused_for_tp,
+    shard_model,
+    tp_param_specs,
+)
+from repro.quant import QuantPolicy, quantize_params, quantized_structs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qt_leaves_with_specs(tree, specs):
+    """Pairs of (path, QuantizedTensor struct, dense PartitionSpec)."""
+    out = []
+
+    def visit(path, leaf, spec):
+        if isinstance(leaf, QuantizedTensor):
+            out.append((jax.tree_util.keystr(path), leaf, spec))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, specs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    return out
+
+
+def _assert_divisible_or_replicated(shape, spec, ax, where):
+    assert len(tuple(spec)) <= len(shape), f"{where}: rank mismatch {spec} {shape}"
+    for dim, axis in zip(shape, tuple(spec)):
+        if axis is None:
+            continue
+        assert dim % ax.size(axis) == 0, (
+            f"{where}: dim {dim} not divisible by {axis}={ax.size(axis)}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# 1. qt_specs_like across the whole config zoo (full published shapes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_qt_specs_for_every_config(arch):
+    """Every quantized leaf of every config gets packed/scales specs that
+    divide their axes or replicate — the paper's group-wise-quantization-
+    shards-cleanly claim, checked structurally at full size (structs only)."""
+    cfg = get_config(arch)
+    ax = single_pod_axes()
+    structs = jax.eval_shape(lambda: init_params(KEY, cfg))
+    qstructs = quantized_structs(structs, QuantPolicy(q=4, g=128))
+    specs = param_specs(cfg, ax)
+    triples = _qt_leaves_with_specs(qstructs, specs)
+    assert triples, f"{arch}: quantization produced no QuantizedTensor leaves"
+    for where, qt, dense_spec in triples:
+        spec = qt_specs_like(dense_spec, qt, ax)
+        _assert_divisible_or_replicated(
+            qt.packed.shape, spec.packed, ax, f"{arch}{where}/packed"
+        )
+        _assert_divisible_or_replicated(
+            qt.scales.shape, spec.scales, ax, f"{arch}{where}/scales"
+        )
+        # o is shared between planes: both shard it identically
+        assert tuple(spec.packed)[-1] == tuple(spec.scales)[-1]
+
+
+def _qt_specs_property(k, o, g, q, tp):
+    """qt_specs_like on a (k, o) weight sharded (None, model): packed o always
+    shards when divisible; scales k-group dim shards iff (k/g) % tp == 0."""
+    ax = decode_tp_axes(tp)
+    qt = QuantizedTensor(
+        packed=jax.ShapeDtypeStruct((q, k // 8, o), jnp.uint8),
+        scales=jax.ShapeDtypeStruct((q, k // g, o), jnp.bfloat16),
+        g=g, k=k, o=o,
+    )
+    spec = qt_specs_like(P("model", None), qt, ax)
+    expect_pk = "model" if (k // 8) % tp == 0 else None
+    expect_sk = "model" if (k // g) % tp == 0 else None
+    assert tuple(spec.packed) == (None, expect_pk, None)
+    assert tuple(spec.scales) == (None, expect_sk, None)
+    _assert_divisible_or_replicated(qt.packed.shape, spec.packed, ax, "packed")
+    _assert_divisible_or_replicated(qt.scales.shape, spec.scales, ax, "scales")
+
+
+_FALLBACK_SHAPES = [
+    (128, 64, 32, 3, 2),
+    (256, 128, 128, 4, 4),
+    (128, 256, 128, 2, 2),  # k/g=1: scales must replicate
+    (192, 128, 24, 4, 4),  # k/8=24 divisible, k/g=8 divisible
+]
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        kc=st.integers(2, 64),
+        o=st.sampled_from([64, 128, 256]),
+        gmul=st.sampled_from([1, 2, 4, 8]),
+        q=st.integers(1, 4),
+        tp=st.sampled_from([2, 4]),
+    )
+    def test_qt_specs_like_property(kc, o, gmul, q, tp):
+        k = kc * 8
+        g = min(8 * gmul, k)
+        if k % g:
+            g = 8
+        _qt_specs_property(k, o, g, q, tp)
+
+else:
+
+    @pytest.mark.parametrize("k,o,g,q,tp", _FALLBACK_SHAPES)
+    def test_qt_specs_like_property(k, o, g, q, tp):
+        _qt_specs_property(k, o, g, q, tp)
+
+
+# ---------------------------------------------------------------------------
+# 2. strict TP specs on a real decode tree
+# ---------------------------------------------------------------------------
+
+
+def _tp_cfg():
+    return reduced(get_config("llama3.2-3b"), d_model=128, n_kv_heads=4, d_ff=256)
+
+
+@functools.lru_cache(maxsize=None)
+def _tp_tree(q: int, fused: bool):
+    from repro.models.fuse import fuse_decode_projections
+
+    cfg = _tp_cfg()
+    params = init_params(KEY, cfg)
+    if q:
+        params = quantize_params(params, QuantPolicy(q=q, g=32, iters=1))
+    if fused:
+        params = fuse_decode_projections(cfg, params)
+    return cfg, params
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("fused", [False, True], ids=["unfused", "fused"])
+def test_tp_specs_cover_every_leaf_and_divide(tp, fused):
+    cfg, params = _tp_tree(4, fused)
+    ax = decode_tp_axes(tp)
+    tree = relayout_fused_for_tp(cfg, params, tp)
+    specs = tp_param_specs(cfg, tree, ax)
+    assert jax.tree.structure(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ) == jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+    def visit(path, leaf, spec):
+        where = jax.tree_util.keystr(path)
+        name = str(getattr(path[-1], "key", path[-1]))
+        if isinstance(leaf, QuantizedTensor):
+            _assert_divisible_or_replicated(leaf.packed.shape, spec.packed, ax, where)
+            _assert_divisible_or_replicated(leaf.scales.shape, spec.scales, ax, where)
+            planes = (tuple(spec.packed), tuple(spec.scales))
+        else:
+            _assert_divisible_or_replicated(leaf.shape, spec, ax, where)
+            planes = (tuple(spec),)
+        # strictness: weight leaves MUST shard (no silent replication)
+        if name in ("wq", "wk", "wv", "wqkv", "w_gate", "w_up", "w_gate_up",
+                    "lm_head", "wo", "w_down"):
+            for pl in planes:
+                assert "model" in pl, f"{where}: silently replicated ({pl})"
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, specs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+
+
+def test_tp_specs_raise_naming_leaf_on_bad_group():
+    """The latent `_wspec`/`_maybe` silent-replication fallback is an error in
+    the TP path: k/g=1 at tp=2 must raise and say which leaf and which dim."""
+    cfg, params = _tp_tree(0, False)
+    params = quantize_params(params, QuantPolicy(q=2, g=128, iters=1))
+    with pytest.raises(ValueError) as ei:
+        tp_param_specs(cfg, params, decode_tp_axes(2))
+    msg = str(ei.value)
+    assert "wo" in msg and "k/g" in msg and "replicated" in msg
+
+
+def test_fused_relayout_rejects_odd_split():
+    """o_total must split per-projection: kv_dim=128 at tp=3 (non-divisor)
+    raises, naming the fused leaf."""
+    cfg, params = _tp_tree(0, True)
+    with pytest.raises(ValueError, match="wqkv"):
+        relayout_fused_for_tp(cfg, params, 3)
+
+
+def test_interleave_perm_is_exact_reshard():
+    """The fused-column permutation is a bijection, and slicing the permuted
+    columns into tp contiguous shards hands shard d exactly [q_d | k_d | v_d]."""
+    out_dims, tp = (12, 8, 8), 4
+    perm = _interleave_perm(out_dims, tp)
+    assert sorted(perm.tolist()) == list(range(sum(out_dims)))
+    shard = np.split(perm, tp)
+    starts = np.cumsum([0] + list(out_dims[:-1]))
+    for d in range(tp):
+        expect = np.concatenate(
+            [st + d * (dim // tp) + np.arange(dim // tp)
+             for st, dim in zip(starts, out_dims)]
+        )
+        np.testing.assert_array_equal(shard[d], expect)
+
+
+# ---------------------------------------------------------------------------
+# 3. placed-tree round trip (real devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.needs_multidevice
+@pytest.mark.parametrize("tp", [2, 4])
+def test_shard_model_roundtrip_unfused(tp):
+    """device_get of every placed leaf equals the unsharded original bit-for-
+    bit (no fused leaves → no re-layout, the tree is untouched)."""
+    cfg, params = _tp_tree(4, False)
+    placed, tpc = shard_model(cfg, params, make_tp_mesh(tp))
+    ref = jax.tree.leaves(params)
+    got = jax.tree.leaves(placed)
+    assert len(ref) == len(got)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(jax.device_get(g)), np.asarray(r))
+
+
+@pytest.mark.needs_multidevice
+def test_shard_model_roundtrip_fused_is_permutation():
+    """Fused leaves round-trip modulo the documented column re-interleave:
+    inverting the permutation recovers the original wqkv columns."""
+    tp = 2
+    cfg, params = _tp_tree(4, True)
+    placed, _ = shard_model(cfg, params, make_tp_mesh(tp))
+    orig = params["stages"][0]["b0"]["attn"]["wqkv"]
+    got = placed["stages"][0]["b0"]["attn"]["wqkv"]
+    perm = _interleave_perm((cfg.q_dim, cfg.kv_dim, cfg.kv_dim), tp)
+    inv = np.argsort(perm)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(got.packed))[..., inv], np.asarray(orig.packed)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(got.scales))[..., inv], np.asarray(orig.scales)
+    )
+
+
+# ---------------------------------------------------------------------------
+# cache layouts + TP axes plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_cache_specs_heads_layout():
+    cfg = _tp_cfg()
+    specs = cache_specs(cfg, decode_tp_axes(2), 1, layout="heads")
+    s = specs["stages"][0]["b0"]["k"]
+    assert tuple(s) == (None, None, None, "model", None)
+    # the GSPMD decode layout is untouched
+    s_dh = cache_specs(cfg, single_pod_axes(), 128)["stages"][0]["b0"]["k"]
+    assert tuple(s_dh)[-1] == "model" and tuple(s_dh)[-2] is None
+    with pytest.raises(ValueError):
+        cache_specs(cfg, decode_tp_axes(2), 1, layout="nope")
+
+
+def test_cache_specs_heads_layout_int8():
+    cfg = ModelConfig(
+        name="t-int8", family="dense", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=4, d_ff=256, vocab=256, kv_cache_dtype="int8",
+    )
+    specs = cache_specs(cfg, decode_tp_axes(4), 1, layout="heads")
+    blk = specs["stages"][0]["b0"]
+    assert tuple(blk["k_scale"]) == (None, None, None, "model")
+    assert tuple(blk["v"]) == (None, None, None, "model", None)
+
+
+def test_decode_tp_axes_shapes():
+    ax = decode_tp_axes(4)
+    assert ax.dp == () and ax.fsdp is None and ax.model == "model"
+    assert ax.data_size == 1 and ax.model_size == 4
+    # empty dp must normalise to None, never P(()), in batch/cache specs
+    cfg = _tp_cfg()
+    bs = __import__("repro.parallel", fromlist=["batch_specs"]).batch_specs(cfg, ax, 4)
+    assert tuple(bs["tokens"]) == (None, None)
+    cs = cache_specs(cfg, ax, 4, layout="heads")
+    assert tuple(cs["stages"][0]["b0"]["k"])[1] is None

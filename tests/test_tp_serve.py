@@ -1,0 +1,318 @@
+"""Tensor-parallel serving (ISSUE 4 tentpole): the cross-config differential
+harness. A `shard_map`-sharded engine (weights column/row-parallel, KV cache
+kv-head-sharded — DESIGN.md §7) must be *invisible* at the token level:
+
+- **greedy decode is bit-identical** to the single-device engine for every
+  (precision × path × tp) cell. Column-parallel projections compute each
+  output element from the full reduction dim, so they are bitwise equal;
+  row-parallel projections psum partial sums, which only reassociates the
+  f32 reduction — logits move by ~1e-5, never enough to flip an argmax on
+  continuously-distributed random logits.
+- **logits are close, not bitwise**, for temperature sampling: the psum
+  reassociation bound (see `test_logits_close_to_single_device`) justifies
+  the tolerance.
+- slot-batched serving and speculative decoding inherit both properties,
+  because every path funnels through the same sharded forward.
+
+Engines are cached per (q, tp, fuse) because each construction compiles its
+own prefill/scan graphs; all tests reuse the same prompts and step counts so
+the jit caches stay warm across the module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import MarkovCorpus
+from repro.infer import Engine, Request, Scheduler, SpecConfig
+from repro.models import init_params, reduced
+from repro.parallel.tp import make_tp_mesh
+from repro.quant import QuantPolicy, quantize_params
+
+pytestmark = pytest.mark.needs_multidevice
+
+KEY = jax.random.PRNGKey(0)
+N_STEPS = 8
+MAX_SEQ = 48
+
+# d_model=128 so quantization actually bites (quantize_params skips <128-dim
+# linears); g=32 keeps (k/g) divisible by tp=4 for the row-parallel wo
+# (k=q_dim=128 → k/g=4) and w_down (k=d_ff=256 → k/g=8)
+Q_GROUP = 32
+
+
+def _cfg():
+    return reduced(get_config("llama3.2-3b"), d_model=128, n_kv_heads=4, d_ff=256)
+
+
+@functools.lru_cache(maxsize=None)
+def _params(q: int):
+    params = init_params(KEY, _cfg())
+    if q:
+        params = quantize_params(params, QuantPolicy(q=q, g=Q_GROUP, iters=2))
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(q: int, tp: int, fuse: bool = True) -> Engine:
+    """tp=0 → the plain single-device engine (the differential reference)."""
+    mesh = make_tp_mesh(tp) if tp else None
+    return Engine(_cfg(), _params(q), max_seq=MAX_SEQ, mesh=mesh, fuse=fuse)
+
+
+@functools.lru_cache(maxsize=None)
+def _prompts():
+    cfg = _cfg()
+    return MarkovCorpus(cfg.vocab, seed=3).sample(2, 6, seed=1).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_tokens(q: int):
+    return _engine(q, 0).generate(_prompts(), N_STEPS).tokens
+
+
+# ---------------------------------------------------------------------------
+# greedy decode: bit-identical tokens across the (precision × tp) grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tp", [1, 2, 4])
+@pytest.mark.parametrize("q", [0, 2, 4], ids=["dense", "bcq2", "bcq4"])
+def test_greedy_tokens_bit_identical(q, tp):
+    out = _engine(q, tp).generate(_prompts(), N_STEPS)
+    np.testing.assert_array_equal(out.tokens, _ref_tokens(q))
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_unfused_engine_greedy_identical(tp):
+    """The per-projection (non-wqkv) kernel layout shards without the fused
+    column re-interleave and must produce the same tokens."""
+    out = _engine(4, tp, fuse=False).generate(_prompts(), N_STEPS)
+    np.testing.assert_array_equal(out.tokens, _ref_tokens(4))
+
+
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "steploop"])
+def test_tp_scan_and_steploop_agree(scan):
+    """Within one TP engine the scanned and per-step decode paths stay
+    bit-identical (the PR 1 invariant survives sharding)."""
+    out = _engine(4, 2).generate(_prompts(), N_STEPS, scan=scan)
+    np.testing.assert_array_equal(out.tokens, _ref_tokens(4))
+
+
+def test_tp1_sampled_bitwise():
+    """A 1-device mesh runs the full shard_map machinery but psums over a
+    single shard — even *sampled* output must match the plain engine
+    bit-for-bit."""
+    ref = _engine(4, 0).generate(_prompts(), N_STEPS, temperature=1.0, seed=7)
+    out = _engine(4, 1).generate(_prompts(), N_STEPS, temperature=1.0, seed=7)
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+
+
+def test_tp_sampled_internally_deterministic():
+    """Sampled decode on a sharded engine is deterministic: logits are
+    replicated post-gather, so the PRNG stream consumes identical values on
+    every device and across runs."""
+    eng = _engine(4, 2)
+    a = eng.generate(_prompts(), N_STEPS, temperature=0.7, seed=11)
+    b = eng.generate(_prompts(), N_STEPS, temperature=0.7, seed=11)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# logits: close up to psum reassociation (the temperature-sampling contract)
+# ---------------------------------------------------------------------------
+
+# Tolerance: row-parallel projections (wo, w_down) psum tp partial sums, which
+# reassociates an f32 reduction of length k∈{128, 256}. Per element the error
+# is bounded by ~(tp-1)·eps·Σ|terms| with eps=2^-24 and activation terms O(1),
+# i.e. ~1e-5 per projection; two blocks + lm_head compound it. 1e-3 abs/rel
+# leaves ~100x headroom over the observed ~1e-5 while still catching any real
+# sharding bug (a wrong shard produces O(1) errors).
+LOGIT_TOL = 1e-3
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("q", [0, 4], ids=["dense", "bcq4"])
+def test_logits_close_to_single_device(q, tp):
+    ref, eng = _engine(q, 0), _engine(q, tp)
+    p = jnp.asarray(_prompts())
+    l_ref, c_ref = ref._prefill(ref.params, p, None, ref._make_cache(2))
+    l_tp, c_tp = eng._prefill(eng.params, p, None, eng._make_cache(2))
+    np.testing.assert_allclose(
+        np.asarray(l_tp), np.asarray(l_ref), rtol=LOGIT_TOL, atol=LOGIT_TOL
+    )
+    tok = jnp.asarray([[3], [5]], jnp.int32)
+    d_ref, _ = ref._decode(ref.params, tok, c_ref, jnp.int32(6))
+    d_tp, _ = eng._decode(eng.params, tok, c_tp, jnp.int32(6))
+    np.testing.assert_allclose(
+        np.asarray(d_tp), np.asarray(d_ref), rtol=LOGIT_TOL, atol=LOGIT_TOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# slot-batched continuous serving on the sharded engine
+# ---------------------------------------------------------------------------
+
+
+def _greedy_requests(n):
+    cfg = _cfg()
+    corpus = MarkovCorpus(cfg.vocab, seed=9)
+    lens = [4, 6, 4, 6, 5]
+    buds = [5, 7, 7, 5, 7]
+    return [
+        Request(
+            prompt=corpus.sample(1, lens[i], seed=50 + i)[0].astype(np.int32),
+            max_new_tokens=buds[i],
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("q", [0, 4], ids=["dense", "bcq4"])
+def test_slot_scheduler_tokens_identical(q, tp):
+    """Continuous batching over the sharded engine, with mid-flight admission
+    (5 requests through 2 slots), against SOLO generates on the single-device
+    engine — the two invariants (slot invisibility + TP invisibility)
+    composed."""
+    reqs = _greedy_requests(5)
+    sched = Scheduler(_engine(q, tp), n_slots=2, chunk=3)
+    for r in reqs:
+        sched.submit(r)
+    done = {c.rid: c for c in sched.run()}
+    assert len(done) == len(reqs)
+    ref = _engine(q, 0)
+    for r in reqs:
+        solo = ref.generate(r.prompt[None], r.max_new_tokens)
+        np.testing.assert_array_equal(
+            done[r.rid].new_tokens, solo.tokens[0, r.prompt.size :],
+            err_msg=f"request {r.rid} diverged from single-device solo",
+        )
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_slot_scheduler_mixed_temps_match_tp_solo(tp):
+    """Sampled rows can't be compared against the *single-device* engine
+    bit-for-bit (psum reassociation shifts logits under the categorical), but
+    slot-batching must stay invisible WITHIN the sharded engine: each
+    request's tokens equal a solo generate on the same TP engine."""
+    eng = _engine(4, tp)
+    reqs = _greedy_requests(4)
+    for i, r in enumerate(reqs):
+        r.temperature = [0.0, 1.0, 0.7, 0.0][i]
+        r.seed = 20 + i
+    sched = Scheduler(eng, n_slots=2, chunk=3)
+    for r in reqs:
+        sched.submit(r)
+    done = {c.rid: c for c in sched.run()}
+    for r in reqs:
+        solo = eng.generate(
+            r.prompt[None], r.max_new_tokens, temperature=r.temperature, seed=r.seed
+        )
+        np.testing.assert_array_equal(
+            done[r.rid].new_tokens, solo.tokens[0, r.prompt.size :]
+        )
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding on the sharded engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("q,q_draft", [(2, 1), (4, 2)], ids=["bcq2_d1", "bcq4_d2"])
+def test_speculative_greedy_identical(q, q_draft, tp):
+    """Draft-verify-rollback on sharded params (the draft is a plane-slice of
+    the SAME sharded weights) must reproduce plain greedy decode exactly —
+    which the single-device reference already equals."""
+    out = _engine(q, tp).generate(
+        _prompts(), N_STEPS, speculate=SpecConfig(q_draft=q_draft, gamma=2)
+    )
+    np.testing.assert_array_equal(out.tokens, _ref_tokens(q))
+    assert out.spec_stats["chunks"] >= 1
+
+
+def test_speculative_slot_scheduler_tp():
+    """Speculative continuous batching (draft cache + pending tokens all
+    sharded) against single-device solo greedy."""
+    eng = _engine(4, 2)
+    reqs = _greedy_requests(4)
+    sched = Scheduler(eng, n_slots=2, chunk=2, speculate=SpecConfig(q_draft=2, gamma=2))
+    for r in reqs:
+        sched.submit(r)
+    done = {c.rid: c for c in sched.run()}
+    ref = _engine(4, 0)
+    for r in reqs:
+        solo = ref.generate(r.prompt[None], r.max_new_tokens)
+        np.testing.assert_array_equal(
+            done[r.rid].new_tokens, solo.tokens[0, r.prompt.size :]
+        )
+
+
+def test_draft_truncation_preserves_sharding():
+    """`truncate_params` slices BCQ planes along q — never the sharded dim —
+    so the draft view must keep the full tree's NamedShardings."""
+    from repro.core.qtensor import QuantizedTensor
+
+    eng = _engine(4, 2)
+    draft = eng.draft_params(2)
+
+    full_leaves = jax.tree.leaves(eng.params)
+    draft_leaves = jax.tree.leaves(draft)
+    assert len(full_leaves) == len(draft_leaves)
+    checked = 0
+    for f, d in zip(full_leaves, draft_leaves):
+        if f.shape != d.shape:  # a truncated plane: q axis halved
+            assert f.sharding.spec == d.sharding.spec
+            checked += 1
+    assert checked > 0, "no truncated leaves found — draft equals target?"
+
+
+def test_kv_cache_sharded_over_heads():
+    """The slot cache's k/v leaves carry `model` on the kv-head dim
+    (R, B, S, Hkv, Dh) and nowhere else; counters stay replicated."""
+    eng = _engine(4, 2)
+    slots = eng.init_slots(2)
+    k = slots["cache"]["stages"][0]["b0"]["k"]
+    assert tuple(k.sharding.spec) == (None, None, None, "model", None)
+    assert np.asarray(slots["pos"]).shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# loud failures instead of silent replication / wrong shards
+# ---------------------------------------------------------------------------
+
+
+def test_rejects_indivisible_scale_groups():
+    """g=128 on a k=128 row-parallel wo gives one scale group — unsplittable
+    at tp=2. shard_model must refuse, naming the leaf and the dims."""
+    params = quantize_params(init_params(KEY, _cfg()), QuantPolicy(q=2, g=128, iters=1))
+    with pytest.raises(ValueError, match=r"wo.*k/g|k/g.*wo"):
+        Engine(_cfg(), params, max_seq=MAX_SEQ, mesh=make_tp_mesh(2))
+
+
+def test_rejects_indivisible_heads():
+    cfg = reduced(get_config("llama3.2-3b"))  # n_kv_heads=2
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        Engine(cfg, init_params(KEY, cfg), max_seq=MAX_SEQ, mesh=make_tp_mesh(4))
+
+
+def test_rejects_recurrent_family():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    with pytest.raises(NotImplementedError, match="rglru"):
+        Engine(cfg, init_params(KEY, cfg), max_seq=MAX_SEQ, mesh=make_tp_mesh(2))
+
+
+def test_rejects_moe_family():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    with pytest.raises(NotImplementedError, match="attn_moe"):
+        Engine(cfg, init_params(KEY, cfg), max_seq=MAX_SEQ, mesh=make_tp_mesh(2))
+
+
+def test_mesh_needs_enough_devices():
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_tp_mesh(64)
