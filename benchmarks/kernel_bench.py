@@ -7,6 +7,14 @@ heuristic block schedule against the measured autotuner pick, and the fused
 QKV kernel (one pass, one activation read) against three per-projection
 dispatches. Interpret-mode CPU timings are the recorded proxy for this
 container; the roofline-modeled bytes carry the TPU claim.
+
+Format-comparison rows (ISSUE 5, DESIGN.md §2.4): the paper's kernel
+comparison shape — LUT-GEMM (``bcq``) vs uniform int-q (``uniform``) vs
+*dequantize-then-matmul* (``dequant``, the Table 3 / Fig. 9 baseline) — at
+the same (q, g) on the same decode matvec, each through its registered
+``qmatmul`` kernel. The modeled decode latency charges ``dequant`` the dense
+round trip (packed read + dense write + dense read) the fused kernels avoid,
+which is the paper's argument in numbers.
 """
 
 from __future__ import annotations
@@ -18,8 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BF16, bcq_bytes, csv_row, matvec_latency_s, time_call
-from repro.core import fuse_tensors, quantize_tensor
-from repro.kernels import autotune
+from repro.core import fuse_tensors, get_format, quantize_tensor
+from repro.kernels import autotune, qmatmul
 from repro.kernels.bcq_mm import bcq_mm
 from repro.kernels.bcq_mm_fused import bcq_mm_fused
 from repro.kernels.ops import quantized_matmul
@@ -124,6 +132,67 @@ def _decode_rows(rng) -> list:
     return rows
 
 
+def _format_bytes(fmt: str, k: int, o: int, q: int, g: int,
+                  scale_bytes: int = 2) -> int:
+    """Decode-step HBM bytes per format (weight-side; activations added by
+    the caller). ``dequant`` pays its packed read PLUS the dense bf16
+    round trip (write after dequant, read by the GEMM) — the pipeline cost
+    the paper's comparison isolates."""
+    if fmt == "bcq":
+        return bcq_bytes(k, o, q, g, scale_bytes)  # paper Eq. 3
+    # uniform/dequant: q bit planes + a (scale, zero) affine pair per group
+    affine = q * (k * o // 8) + 2 * (k * o // g) * scale_bytes
+    if fmt == "uniform":
+        return affine
+    return affine + 2 * k * o * BF16  # dequant: + dense write + dense read
+
+
+def _format_rows(rng) -> list:
+    """BCQ vs uniform vs dequant decode matvec at the same (q, g) — the
+    paper's kernel-comparison shape, reproduced on host. CPU interpret wall
+    time is the functional proxy; the modeled v5e latency (memory-bound byte
+    stream + 2us per dispatch) carries the claim, and shows the dequant
+    baseline strictly slower than the one-pass kernels."""
+    k = o = 1024
+    q, g, B = 4, 128, 1
+    w = jnp.asarray(rng.standard_normal((k, o)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, k)), jnp.float32)
+    act_bytes = B * k * 4 + B * o * 4
+    launch_us = 2.0
+    rows, model_us = [], {}
+    for fmt in ("bcq", "uniform", "dequant"):
+        qt = quantize_tensor(
+            w, q, g, iters=1, scale_dtype=jnp.float32, method="greedy", fmt=fmt
+        )
+        impl = get_format(fmt).impls[0]
+        fn = functools.partial(qmatmul, fmt, impl=impl, interpret=True)
+        t_cpu = time_call(lambda xx: fn(xx, qt)[0], x, reps=3)
+        dispatches = 2 if fmt == "dequant" else 1
+        model_us[fmt] = (
+            matvec_latency_s(_format_bytes(fmt, k, o, q, g), act_bytes) * 1e6
+            + launch_us * dispatches
+        )
+        rows.append(
+            csv_row(
+                f"kernel/decode_fmt_b{B}/{fmt}_{impl}",
+                t_cpu,
+                f"tpu_model_us={model_us[fmt]:.2f};"
+                f"hbm_bytes={_format_bytes(fmt, k, o, q, g)};"
+                f"dispatches={dispatches};nbytes_packed={qt.nbytes()}",
+            )
+        )
+    rows.append(
+        csv_row(
+            f"kernel/decode_fmt_b{B}/dequant_vs_bcq",
+            model_us["dequant"],
+            f"slowdown_model={model_us['dequant'] / model_us['bcq']:.2f}x;"
+            f"slowdown_vs_uniform={model_us['dequant'] / model_us['uniform']:.2f}x;"
+            "baseline=dequantize-then-matmul (paper Table 3 / Fig. 9 shape)",
+        )
+    )
+    return rows
+
+
 def _engine_rows() -> list:
     """End-to-end decode: scanned + fused engine vs per-token step loop.
 
@@ -193,5 +262,6 @@ def run() -> list:
             )
         )
     rows.extend(_decode_rows(rng))
+    rows.extend(_format_rows(rng))
     rows.extend(_engine_rows())
     return rows

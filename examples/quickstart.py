@@ -48,8 +48,8 @@ groups shard with their k-rows — the engine raises naming the leaf if not;
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression_ratio, quantize_tensor
-from repro.kernels import quantized_matmul
+from repro.core import compression_ratio, format_names, get_format, quantize_tensor
+from repro.kernels import qmatmul, quantized_matmul
 
 rng = np.random.default_rng(0)
 
@@ -77,3 +77,16 @@ for q_draft in (1, 2, 3):
     rel = float(jnp.linalg.norm(qd.dequantize() - w) / jnp.linalg.norm(w))
     print(f"nested q'={q_draft}: {qd.nbytes()/2**20:.1f} MiB, "
           f"weight rel error = {rel:.4f} (monotone in q')")
+
+# the format registry (DESIGN.md §2.4): the same qmatmul dispatch serves BCQ,
+# FineQuant-style group-wise uniform int-q, and the paper's dequantize-then-
+# matmul baseline — `python -m repro.launch.serve --format {bcq,uniform,dequant}`
+# runs each end-to-end; benchmarks/kernel_bench.py records the comparison rows
+print(f"\nregistered formats: {format_names()}")
+for fmt in ("bcq", "uniform", "dequant"):
+    qf = quantize_tensor(w, q=4, g=128, iters=8, fmt=fmt)
+    (y,) = qmatmul(fmt, x, qf, impl="ref")
+    rel = float(jnp.linalg.norm(y - y_dense) / jnp.linalg.norm(y_dense))
+    kernels = ", ".join(get_format(fmt).impls)
+    print(f"{fmt:8s}: {qf.nbytes()/2**20:.1f} MiB, rel error = {rel:.4f}, "
+          f"kernels = [{kernels}]")

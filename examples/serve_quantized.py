@@ -1,5 +1,8 @@
 """End-to-end serving driver (the paper's kind: inference) — batched requests
 through the prefill/decode split engine with packed BCQ weights (Fig. 13),
+plus the other registered quantization formats (DESIGN.md §2.4: FineQuant-
+style ``uniform`` int-q and the ``dequant`` dequantize-then-matmul baseline,
+asserted bit-identical to ``uniform`` since they share one packing),
 then the same requests again with self-speculative decoding (DESIGN.md §5):
 the nested low-bit planes of the SAME packed weights draft tokens that the
 full-precision model verifies, with the acceptance rate printed next to the
@@ -69,16 +72,32 @@ def main():
     prompts = corpus.sample(args.batch, args.prompt_len, seed=99)[:, : args.prompt_len]
     prompts = prompts.astype(np.int32)
 
+    # format registry (DESIGN.md §2.4): the same engine serves BCQ, uniform
+    # int-q, and the paper's dequantize-then-matmul baseline — only the
+    # QuantPolicy's fmt changes. uniform/dequant share one packing, so their
+    # greedy outputs are asserted bit-identical (kernel pipeline isolated).
+    qp_uni = quantize_params(params, QuantPolicy(q=4, g=64, fmt="uniform"))
+    qp_deq = quantize_params(params, QuantPolicy(q=4, g=64, fmt="dequant"))
+    print(f"uniform q=4 g=64 bytes: {quantized_bytes(qp_uni)/2**20:.2f} MiB")
+
     toks = args.batch * args.gen
-    for tag, p in (("dense", params), ("bcq-q4", qp)):
+    fmt_tokens = {}
+    for tag, p in (
+        ("dense", params), ("bcq-q4", qp), ("uniform-q4", qp_uni),
+        ("dequant-q4", qp_deq),
+    ):
         eng = Engine(cfg, p, max_seq=args.prompt_len + args.gen + 8)
         t0 = time.perf_counter()
         res = eng.generate(prompts, args.gen)
         dt = time.perf_counter() - t0
+        fmt_tokens[tag] = res.tokens
         print(
             f"{tag:12s}: {toks} tokens in {dt:.2f}s "
             f"({toks/dt:.1f} tok/s CPU) sample={res.tokens[0, args.prompt_len:args.prompt_len+10]}"
         )
+    assert np.array_equal(fmt_tokens["uniform-q4"], fmt_tokens["dequant-q4"]), (
+        "uniform and dequant share one packing — greedy output must match"
+    )
 
     # self-speculative decode: the nested 2-bit planes of the SAME packed
     # weights draft gamma tokens per chunk; the 4-bit model verifies them in

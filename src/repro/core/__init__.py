@@ -1,4 +1,4 @@
-"""Core group-wise binary-coding quantization (BCQ) math."""
+"""Core quantization math + the pluggable format registry (DESIGN.md §2.4)."""
 
 from repro.core.bcq import (
     bcq_error,
@@ -7,18 +7,30 @@ from repro.core.bcq import (
     quantize_bcq,
     quantize_bcq_greedy,
 )
-from repro.core.packing import pack_signs, unpack_signs
+from repro.core.formats import (
+    QuantFormat,
+    format_names,
+    get_format,
+    register_format,
+)
+from repro.core.packing import pack_codes, pack_signs, unpack_codes, unpack_signs
 from repro.core.qtensor import QuantizedTensor, fuse_tensors, quantize_tensor
 
 __all__ = [
+    "QuantFormat",
     "QuantizedTensor",
     "bcq_error",
     "compression_ratio",
     "dequantize",
+    "format_names",
     "fuse_tensors",
+    "get_format",
+    "pack_codes",
     "pack_signs",
     "quantize_bcq",
     "quantize_bcq_greedy",
     "quantize_tensor",
+    "register_format",
+    "unpack_codes",
     "unpack_signs",
 ]

@@ -36,3 +36,34 @@ def unpack_signs(packed: jax.Array) -> jax.Array:
     bits = (packed[..., :, None, :] >> shifts[:, None]) & jnp.uint8(1)
     signs = (2 * bits.astype(jnp.int8) - 1).reshape(*lead, kc * MU, o)
     return signs
+
+
+def pack_codes(codes: jax.Array, q: int) -> jax.Array:
+    """Pack unsigned ``q``-bit codes ``(..., k, o)`` → uint8 ``(..., q, k//8, o)``.
+
+    Plane ``i`` holds bit ``i`` of every code, packed 8-per-byte along ``k``
+    exactly like :func:`pack_signs` (LSB-first) — uniform int-quant codes get
+    the same physical layout as BCQ sign planes, so sharding/fusion machinery
+    treats both formats identically (``core/formats.py``).
+    """
+    *lead, k, o = codes.shape
+    if k % MU != 0:
+        raise ValueError(f"reduction dim {k} must be a multiple of {MU}")
+    plane_shift = jnp.arange(q, dtype=jnp.uint8)[:, None, None]
+    planes = (codes.astype(jnp.uint8)[..., None, :, :] >> plane_shift) & jnp.uint8(1)
+    bits = planes.reshape(*lead, q, k // MU, MU, o)
+    weights = (jnp.uint8(1) << jnp.arange(MU, dtype=jnp.uint8))  # LSB-first
+    return jnp.sum(bits * weights[:, None], axis=-2, dtype=jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_codes`: ``(..., q, k//8, o)`` → int32 ``(..., k, o)``.
+
+    Reassembles the magnitude from the ``q`` bit planes (``Σ_i 2^i · bit_i``).
+    """
+    *lead, q, kc, o = packed.shape
+    shifts = jnp.arange(MU, dtype=jnp.uint8)
+    bits = (packed[..., :, :, None, :] >> shifts[:, None]) & jnp.uint8(1)
+    planes = bits.reshape(*lead, q, kc * MU, o).astype(jnp.int32)
+    weights = (1 << jnp.arange(q, dtype=jnp.int32))[:, None, None]
+    return jnp.sum(planes * weights, axis=-3)

@@ -1,10 +1,24 @@
-"""QuantizedTensor — the packed group-wise BCQ weight container.
+"""QuantizedTensor — the packed quantized-weight container, tagged by format.
 
-This is the on-device format the whole framework moves around: packed binary
+This is the on-device representation the whole framework moves around: packed
 codes + group scales, registered as a JAX pytree so it shards under pjit,
 checkpoints, and passes through ``jax.jit`` boundaries like any array.
 
-Memory per weight (paper Eq. 3): ``q·(1 + scale_bits/g)`` bits vs 16 (bf16).
+The container itself is format-agnostic (DESIGN.md §2.4): ``fmt`` names a
+registered :class:`~repro.core.formats.QuantFormat` that owns the semantics —
+how ``packed``/``scales`` encode the weight, which kernels consume them, how
+they shard under tensor parallelism, and which capabilities (nested
+truncation, output-dim fusion) apply. All formats share the physical layout
+
+    packed : uint8 ``(…, P, k // 8, o)`` — P bit planes, 8 codes per byte
+             (LSB-first along k; a byte is directly a LUT key for BCQ)
+    scales : ``(…, S, k // g, o)``       — per-group affine parameters
+
+so sharding/fusion/stacking machinery works uniformly; only P, S and the
+reconstruction rule differ per format (BCQ: P = q sign planes, S = q scale
+planes; uniform/dequant: P = q magnitude bit planes, S = 2 (scale, zero)).
+
+Memory per weight (paper Eq. 3 for BCQ): ``q·(1 + scale_bits/g)`` bits vs 16.
 """
 
 from __future__ import annotations
@@ -15,22 +29,19 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcq as bcq_lib
-from repro.core import packing
-
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
-    """Group-wise BCQ representation of a ``(k, o)`` weight matrix.
+    """Format-tagged group-wise quantization of a ``(k, o)`` weight matrix.
 
     Attributes
     ----------
-    packed : uint8 ``(q, k // 8, o)`` — binary codes, 8 per byte (LSB-first),
-        byte index = LUT key (paper Table II).
-    scales : ``(q, k // g, o)`` — per-group scaling factors (bf16 by default).
+    packed : uint8 ``(P, k // 8, o)`` — packed code planes (see module doc).
+    scales : ``(S, k // g, o)`` — per-group scaling factors (bf16 by default).
     g      : static group size.
     k, o   : static logical shape (``y = x @ W``; ``k`` is the reduction dim).
+    fmt    : static format tag — a :mod:`repro.core.formats` registry name.
     """
 
     packed: jax.Array
@@ -38,10 +49,13 @@ class QuantizedTensor:
     g: int = dataclasses.field(metadata=dict(static=True))
     k: int = dataclasses.field(metadata=dict(static=True))
     o: int = dataclasses.field(metadata=dict(static=True))
+    fmt: str = dataclasses.field(default="bcq", metadata=dict(static=True))
 
     @property
     def q(self) -> int:
-        return self.packed.shape[-3]  # robust to leading layer/expert stacking
+        """Code planes (BCQ: bit planes = q; uniform: magnitude bits).
+        Read from the shape so it is robust to leading layer/expert stacking."""
+        return self.packed.shape[-3]
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -51,6 +65,12 @@ class QuantizedTensor:
     def dtype(self):
         return self.scales.dtype
 
+    def format(self):
+        """The registered :class:`~repro.core.formats.QuantFormat` object."""
+        from repro.core.formats import get_format
+
+        return get_format(self.fmt)
+
     def dequantize(self, dtype=jnp.float32) -> jax.Array:
         """Reconstruct the dense ``(…, k, o)`` matrix (prefill path, Fig. 13).
 
@@ -58,38 +78,22 @@ class QuantizedTensor:
         compute dtype (bf16) — halves the dequant HBM round-trip vs f32 and
         matches what the fused TPU kernel computes in registers.
         """
-        signs = packing.unpack_signs(self.packed)  # (…, q, k, o) int8
-        w = bcq_lib.dequantize(self.scales.astype(jnp.float32), signs, self.g)
-        return w.astype(dtype)
+        return self.format().dequantize(self, dtype=dtype)
 
     def nbytes(self) -> int:
-        """Packed size in bytes (binary + scales)."""
-        return int(self.packed.size) + int(self.scales.size) * self.scales.dtype.itemsize
+        """Packed size in bytes (code planes + scales)."""
+        return self.format().nbytes(self)
 
     def truncate(self, q_new: int) -> "QuantizedTensor":
         """The nested ``q_new``-bit approximation living inside this tensor.
 
-        BCQ is nested by construction (paper §III.A): the greedy solver builds
-        plane ``i`` as a refinement of the residual left by planes ``< i``, so
+        A format *capability*: BCQ is nested by construction (paper §III.A —
         ``packed[:q_new], scales[:q_new]`` is itself a valid ``q_new``-bit BCQ
-        of the same weight — bit-identical to what the greedy solver would
-        emit at ``q=q_new``. This is what makes every quantized model a free
-        family of cheaper draft models (infer/speculative.py).
-
-        The slice is a view at trace time (no repacking, no re-solve); ``g``,
-        ``k``, ``o`` and any leading layer/expert stacking are preserved.
+        of the same weight), which is what makes every BCQ model a free family
+        of cheaper draft models (infer/speculative.py). Formats without the
+        capability raise a ``ValueError`` naming themselves.
         """
-        if not 1 <= q_new <= self.q:
-            raise ValueError(f"cannot truncate q={self.q} tensor to q'={q_new}")
-        if q_new == self.q:
-            return self
-        return QuantizedTensor(
-            packed=self.packed[..., :q_new, :, :],
-            scales=self.scales[..., :q_new, :, :],
-            g=self.g,
-            k=self.k,
-            o=self.o,
-        )
+        return self.format().truncate(self, q_new)
 
 
 def fuse_tensors(qts: Sequence[QuantizedTensor]) -> QuantizedTensor:
@@ -97,27 +101,17 @@ def fuse_tensors(qts: Sequence[QuantizedTensor]) -> QuantizedTensor:
 
     One-time weight-prep for the fused multi-projection kernel: the result's
     ``x @ W`` equals the per-tensor products side by side, so a single kernel
-    pass serves all N projections. Requires identical ``(k, q, g)`` and scale
-    dtype — true for Q/K/V and gate/up under any per-sublayer-type policy.
+    pass serves all N projections. Delegates to the shared format's ``fuse``
+    capability — requires identical format, ``(k, q, g)`` and scale dtype
+    (true for Q/K/V and gate/up under any per-sublayer-type policy).
     """
     first = qts[0]
     for t in qts[1:]:
-        if (t.k, t.q, t.g) != (first.k, first.q, first.g):
+        if t.fmt != first.fmt:
             raise ValueError(
-                f"cannot fuse: (k, q, g) mismatch {(t.k, t.q, t.g)} vs "
-                f"{(first.k, first.q, first.g)}"
+                f"cannot fuse: format mismatch {t.fmt!r} vs {first.fmt!r}"
             )
-        if t.scales.dtype != first.scales.dtype:
-            raise ValueError("cannot fuse: scale dtype mismatch")
-        if t.packed.shape[:-1] != first.packed.shape[:-1]:
-            raise ValueError("cannot fuse: leading (layer/expert) dims differ")
-    return QuantizedTensor(
-        packed=jnp.concatenate([t.packed for t in qts], axis=-1),
-        scales=jnp.concatenate([t.scales for t in qts], axis=-1),
-        g=first.g,
-        k=first.k,
-        o=sum(t.o for t in qts),
-    )
+    return first.format().fuse(qts)
 
 
 def quantize_tensor(
@@ -127,23 +121,17 @@ def quantize_tensor(
     iters: int = 10,
     scale_dtype=jnp.bfloat16,
     method: str = "alternating",
+    fmt: str = "bcq",
 ) -> QuantizedTensor:
     """Quantize a dense ``(k, o)`` weight to a :class:`QuantizedTensor`.
 
-    ``method``: ``"alternating"`` (paper's PTQ solver, Xu et al. [20]) or
-    ``"greedy"`` (init only; much faster, used for huge layers and tests).
+    ``fmt`` picks the registered format (``"bcq"`` default). For BCQ,
+    ``method`` is ``"alternating"`` (paper's PTQ solver, Xu et al. [20]) or
+    ``"greedy"`` (init only; much faster, used for huge layers and tests);
+    uniform formats are closed-form and ignore ``method``/``iters``.
     """
-    k, o = w.shape
-    if method == "alternating":
-        scales, binary = bcq_lib.quantize_bcq(w, q=q, g=g, iters=iters)
-    elif method == "greedy":
-        scales, binary = bcq_lib.quantize_bcq_greedy(w, q=q, g=g)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return QuantizedTensor(
-        packed=packing.pack_signs(binary),
-        scales=scales.astype(scale_dtype),
-        g=g,
-        k=k,
-        o=o,
+    from repro.core.formats import get_format
+
+    return get_format(fmt).quantize(
+        w, q=q, g=g, iters=iters, scale_dtype=scale_dtype, method=method
     )

@@ -59,10 +59,18 @@ class GenerationResult:
 
 
 def _sample(logits: jax.Array, key: jax.Array, temperature, greedy: bool) -> jax.Array:
-    """(B, V) f32 logits → (B,) int32 tokens, on device."""
+    """(B, V) f32 logits → (B,) int32 tokens, on device.
+
+    ``temperature <= 0`` with ``greedy=False`` falls back to argmax instead of
+    dividing by zero (``logits / 0`` → ±inf → NaN probabilities in the
+    categorical). ``temperature`` may be a traced scalar, so the guard is a
+    ``jnp.where`` on the *result*, and the division clamps its denominator —
+    bit-identical to the unguarded path for any real temperature > 1e-6.
+    """
     if greedy:
         return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature)
+    sampled = jax.random.categorical(key, logits / jnp.maximum(temperature, 1e-6))
+    return jnp.where(temperature > 0, sampled, jnp.argmax(logits, axis=-1))
 
 
 class Engine:
@@ -423,6 +431,27 @@ class Engine:
 
     def _validate_spec(self, spec: SpecConfig) -> None:
         cfg = self.cfg
+        # capability gate (DESIGN.md §2.4): drafts are nested low-bit views of
+        # the target's own weights, which only residual-nested formats (BCQ)
+        # can provide — refuse before tracing, naming the offending formats
+        from repro.core.formats import get_format
+        from repro.core.qtensor import QuantizedTensor
+
+        bad = sorted(
+            {
+                leaf.fmt
+                for leaf in jax.tree.leaves(
+                    self.params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+                )
+                if isinstance(leaf, QuantizedTensor)
+                and not get_format(leaf.fmt).supports_truncate
+            }
+        )
+        if bad:
+            raise ValueError(
+                f"speculative decoding needs truncation-capable weight formats; "
+                f"{bad} do not support nested draft truncation (use 'bcq')"
+            )
         if cfg.input_kind != "tokens":
             raise ValueError(
                 "speculative decoding requires a tokens-input model (host-side "

@@ -85,6 +85,19 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        # temperature feeds `logits / temperature` on device: NaN/inf would
+        # poison sampling silently (NaN fails every `<= 0` greedy check and
+        # then divides the logits), negative values would invert the
+        # distribution. Exactly 0.0 means greedy by convention.
+        if not np.isfinite(self.temperature):
+            raise ValueError(
+                f"temperature must be finite, got {self.temperature!r}"
+            )
+        if self.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), got {self.temperature!r}"
+            )
+        self.temperature = float(self.temperature)
 
 
 @dataclasses.dataclass

@@ -75,12 +75,25 @@ class SpecConfig:
 
     @classmethod
     def parse(cls, text: str) -> "SpecConfig":
-        """Parse the CLI form ``q_draft:gamma`` (e.g. ``2:4``)."""
+        """Parse the CLI form ``q_draft:gamma`` (e.g. ``2:4``).
+
+        Every failure mode — wrong separator, non-integer parts, out-of-range
+        values — raises a ``ValueError`` that names the expected ``QD:GAMMA``
+        syntax, so CLI surfaces (``launch/serve.py --speculate``) can forward
+        the message verbatim instead of a bare traceback.
+        """
+        syntax = (
+            "expected 'QD:GAMMA' — two ':'-separated integers, QD = draft "
+            "bit-planes >= 1, GAMMA = proposals per chunk >= 1 (e.g. '2:4')"
+        )
         try:
             q_draft, gamma = (int(t) for t in text.split(":"))
         except ValueError as e:
-            raise ValueError(f"expected 'q_draft:gamma', got {text!r}") from e
-        return cls(q_draft=q_draft, gamma=gamma)
+            raise ValueError(f"{syntax}; got {text!r}") from e
+        try:
+            return cls(q_draft=q_draft, gamma=gamma)
+        except ValueError as e:
+            raise ValueError(f"{syntax}; got {text!r} ({e})") from e
 
 
 def has_recurrent_state(cfg: ModelConfig) -> bool:

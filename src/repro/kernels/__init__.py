@@ -3,27 +3,40 @@
 - ``lutgemm.py``      paper-faithful LUT-based quantized matvec/matmul
 - ``bcq_mm.py``       fused unpack→MXU variant (TPU-native, beyond-paper)
 - ``bcq_mm_fused.py`` multi-projection (QKV / gate-up) decode fast path
+- ``uniform_mm.py``   group-wise uniform int-q matvec (FineQuant-style)
+- ``dequant_mm.py``   dequantize-then-GEMM baseline (the paper's comparison)
 - ``autotune.py``     measured (block_k, block_o) schedule table
-- ``ops.py``          jit'd dispatch wrappers (+ pure-JAX fallback)
+- ``ops.py``          ``qmatmul`` format-registry dispatch (+ pure-JAX fallback)
 - ``ref.py``          pure-jnp oracles
 """
 
 from repro.kernels.bcq_mm import bcq_mm
 from repro.kernels.bcq_mm_fused import bcq_mm_fused
+from repro.kernels.dequant_mm import dequant_mm
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.lutgemm import lutgemm
-from repro.kernels.ops import linear, linear_fused, quantized_matmul, quantized_matmul_fused
+from repro.kernels.ops import (
+    linear,
+    linear_fused,
+    qmatmul,
+    quantized_matmul,
+    quantized_matmul_fused,
+)
 from repro.kernels.ref import bcq_mm_ref, lutgemm_tablewise_ref
+from repro.kernels.uniform_mm import uniform_mm
 
 __all__ = [
     "bcq_mm",
     "bcq_mm_fused",
     "bcq_mm_ref",
+    "dequant_mm",
     "flash_attention",
     "linear",
     "linear_fused",
     "lutgemm",
     "lutgemm_tablewise_ref",
+    "qmatmul",
     "quantized_matmul",
     "quantized_matmul_fused",
+    "uniform_mm",
 ]

@@ -23,7 +23,11 @@ Resolution order for a ``(B, k, o, q, g, impl, backend)`` query:
    don't know.
 
 Keys deliberately include the backend (``cpu``/``tpu``/… plus ``-interpret``)
-so CPU interpret-mode timings can never masquerade as TPU schedules.
+so CPU interpret-mode timings can never masquerade as TPU schedules. The
+``impl`` axis spans every registered quantization format's kernels
+(``bcq_mm``/``lutgemm``/``uniform_mm``/… — formats register their kernels
+for measurement via :func:`register_measure_kernel`, DESIGN.md §2.4), so
+per-format winners never collide.
 
 Reproducibility note: ``block_k`` partitions the f32 accumulation, so two
 hosts that measure different winners can produce bitwise-different logits
@@ -154,6 +158,39 @@ def heuristic_blocks(k: int, o: int, g: int) -> Tuple[int, int]:
 # measurement
 # ---------------------------------------------------------------------------
 
+# impl name -> (kernel loader, synthetic-scales maker). Formats register their
+# Pallas kernels here (core/formats.py) so the measurement sweep covers every
+# registered format's schedule space; the impl name is also the table-key axis
+# that keeps per-format winners from colliding.
+_MEASURE_KERNELS: Dict[str, tuple] = {}
+
+
+def register_measure_kernel(impl: str, loader, make_scales) -> None:
+    """Make ``impl`` measurable: ``loader()`` returns the kernel fn (lazy so
+    registration never forces a kernel import); ``make_scales(rng, q, k, o, g)``
+    returns that format's synthetic scales array."""
+    _MEASURE_KERNELS[impl] = (loader, make_scales)
+
+
+def _load_bcq_mm():
+    from repro.kernels.bcq_mm import bcq_mm
+
+    return bcq_mm
+
+
+def _load_lutgemm():
+    from repro.kernels.lutgemm import lutgemm
+
+    return lutgemm
+
+
+def _bcq_meas_scales(rng, q, k, o, g):
+    return rng.standard_normal((q, k // g, o))
+
+
+register_measure_kernel("bcq_mm", _load_bcq_mm, _bcq_meas_scales)
+register_measure_kernel("lutgemm", _load_lutgemm, _bcq_meas_scales)
+
 
 def _time_once(fn, *args) -> float:
     out = fn(*args)  # warmup: compile/trace
@@ -179,9 +216,9 @@ def _measure(
     (verified: outer computation stays at its 3-eqn dispatch regardless of
     sweep size). Do not thread caller arrays into here.
     """
-    from repro.kernels.bcq_mm import bcq_mm
-    from repro.kernels.lutgemm import lutgemm
-
+    entry = _MEASURE_KERNELS.get(impl)
+    if entry is None:
+        return None  # unknown impl: caller falls through to the heuristic
     bks, bos = candidate_blocks(k, o, g)
     if not bks or not bos:
         return None
@@ -190,8 +227,8 @@ def _measure(
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((B, k)), jnp.float32)
     packed = jnp.asarray(rng.integers(0, 256, (q, k // 8, o)), jnp.uint8)
-    scales = jnp.asarray(rng.standard_normal((q, k // g, o)), jnp.float32)
-    fn = {"bcq_mm": bcq_mm, "lutgemm": lutgemm}[impl]
+    scales = jnp.asarray(entry[1](rng, q, k, o, g), jnp.float32)
+    fn = entry[0]()
 
     best, best_t = None, float("inf")
     for bk in bks:

@@ -1,0 +1,121 @@
+"""Dequantize-then-matmul baseline kernel — the paper's comparison target.
+
+LUT-GEMM's headline claim (paper §V, Table 3 / Fig. 9) is measured against
+kernels that first *materialise* the dense weight from its quantized form and
+then run a stock GEMM (the OPTQ/nuQmm serving recipe: dequant kernel +
+cuBLAS). This module is that baseline as executable code, on the uniform
+int-q packing (``core/formats.py::UniformFormat`` — same packed planes and
+affine group scales, so any difference vs ``uniform_mm`` is *pipeline*, not
+representation):
+
+1. **dequantize** — a Pallas kernel streams the packed planes block-by-block
+   through VMEM, reassembles codes, applies the group affine, and writes the
+   dense ``(k, o)`` matrix **back to HBM** (this round trip is exactly the
+   overhead the fused kernels avoid — the modeled cost in
+   ``benchmarks/kernel_bench.py`` charges ``2·k·o·dtype`` extra HBM bytes);
+2. **matmul** — a second dispatch runs the dense dot on the MXU (XLA's
+   native GEMM; the cuBLAS analogue).
+
+Two dispatches, one dense-weight HBM round trip, per-launch overhead twice:
+strictly more memory traffic than the one-pass kernels at decode batch sizes,
+which is the paper's argument reproduced in code.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.uniform_mm import _unpack_codes_block
+
+DEFAULT_BLOCK_K = 512
+DEFAULT_BLOCK_O = 256
+
+
+def _dequant_kernel(packed_ref, scales_ref, out_ref, *, g: int, bk: int, out_dtype):
+    codes = _unpack_codes_block(packed_ref[...], jnp.float32)  # (bk, bo)
+    scales = scales_ref[...].astype(jnp.float32)  # (2, bk//g or 1, bo)
+    s, z = scales[0], scales[1]
+    bk_, bo = codes.shape
+    if g <= bk:
+        w = (codes.reshape(bk // g, g, bo) * s[:, None, :] + z[:, None, :]).reshape(
+            bk, bo
+        )
+    else:
+        w = codes * s + z
+    out_ref[...] = w.astype(out_dtype)
+
+
+def dequant_materialize(
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    g: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_o: int = DEFAULT_BLOCK_O,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Packed uniform planes → dense ``(k, o)`` weight, written to HBM.
+
+    The grid tiles ``(k, o)``; every cell unpacks + scales its block in VMEM
+    and stores the dense block — the standalone "dequant kernel" half of the
+    baseline. Tiling constraints are the shared ones (``bcq_mm.py``).
+    """
+    from repro.kernels.bcq_mm import _validate_tiling
+
+    q, kc, o = packed.shape
+    k = kc * 8
+    _validate_tiling(k, o, kc, g, block_k, block_o)
+
+    if g <= block_k:
+        scales_spec = pl.BlockSpec(
+            (2, block_k // g, block_o), lambda ik, io: (0, ik, io)
+        )
+    else:
+        scales_spec = pl.BlockSpec(
+            (2, 1, block_o), lambda ik, io: (0, ik // (g // block_k), io)
+        )
+    kernel = functools.partial(
+        _dequant_kernel, g=g, bk=block_k, out_dtype=out_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(k // block_k, o // block_o),
+        in_specs=[
+            pl.BlockSpec((q, block_k // 8, block_o), lambda ik, io: (0, ik, io)),
+            scales_spec,
+        ],
+        out_specs=pl.BlockSpec((block_k, block_o), lambda ik, io: (ik, io)),
+        out_shape=jax.ShapeDtypeStruct((k, o), out_dtype),
+        interpret=interpret,
+    )(packed, scales)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "block_k", "block_o", "interpret")
+)
+def dequant_mm(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: jax.Array,
+    *,
+    g: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_o: int = DEFAULT_BLOCK_O,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (B, k) @ uniform-packed weights via dequantize-into-HBM + dense GEMM.
+
+    Same contract as :func:`repro.kernels.uniform_mm.uniform_mm`; deliberately
+    the slow way round (two dispatches, dense round trip) — this is the
+    baseline side of the paper's kernel comparison, not a serving path.
+    """
+    w = dequant_materialize(
+        packed, scales, g=g, block_k=block_k, block_o=block_o,
+        interpret=interpret, out_dtype=jnp.float32,
+    )
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

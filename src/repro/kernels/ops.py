@@ -1,29 +1,36 @@
-"""jit'd dispatch wrappers over the Pallas kernels.
+"""The one quantized-matmul dispatch the rest of the framework calls.
 
-``quantized_matmul`` is THE entry point the rest of the framework uses for
-``x @ W`` against a :class:`~repro.core.qtensor.QuantizedTensor`:
+``qmatmul(fmt, x, qt, ...)`` is THE entry point for ``x @ W`` against a packed
+:class:`~repro.core.qtensor.QuantizedTensor`: it resolves the registered
+:class:`~repro.core.formats.QuantFormat` and routes to that format's kernel
+entries (DESIGN.md §2.4). No other module branches on a concrete format.
 
-- ``impl="ref"``      pure-jnp dequantize+dot (XLA-fusable). Used by models on
-                      CPU and by the dry-run lowering — on a real TPU deployment
-                      this HLO region is replaced by the Pallas kernels below.
-- ``impl="bcq_mm"``   fused unpack→scale→MXU Pallas kernel (TPU-native variant).
-- ``impl="lutgemm"``  paper-faithful LUT kernel.
-- ``impl="auto"``     bcq_mm on TPU backends, ref elsewhere.
+- ``impl="ref"``     the format's dequantize+dot oracle (XLA-fusable). Used by
+                     models on CPU and by the dry-run lowering — on a real TPU
+                     deployment this HLO region is replaced by the Pallas
+                     kernels below.
+- ``impl="auto"``    the format's preferred Pallas kernel on TPU backends,
+                     ``ref`` elsewhere.
+- explicit impls     any of the format's registered kernels — for ``bcq``:
+                     ``bcq_mm`` (fused unpack→scale→MXU, TPU-native) and
+                     ``lutgemm`` (paper-faithful LUT); ``uniform``:
+                     ``uniform_mm``; ``dequant``: ``dequant_mm`` (the explicit
+                     dequantize-then-GEMM baseline).
 
-``quantized_matmul_fused`` is the decode fast path: N projections of the same
-activation (QKV, gate-up) whose packed weights were concatenated along the
-output dim at weight-prep time (``repro.core.fuse_tensors``) run as ONE kernel
-pass and return N outputs — one dispatch, one activation stream (DESIGN.md
-§2.3).
+Passing ``out_dims`` runs the *fused multi-projection* path: N projections of
+the same activation (QKV, gate-up) whose packed weights were concatenated
+along the output dim at weight-prep time (``repro.core.fuse_tensors``) run as
+ONE kernel pass and return N outputs — one dispatch, one activation stream
+(DESIGN.md §2.3).
 
 Block sizes come from :mod:`repro.kernels.autotune` — measured winners per
-``(B, k, o, q, g, impl, backend)`` with a JSON-persisted table and the old
-hardcoded preference order as the safe fallback (``REPRO_AUTOTUNE=0`` opts out
-of measurement).
+``(B, k, o, q, g, impl, backend)``; the ``impl`` axis spans every registered
+format's kernels, so per-format winners never collide.
 
 The wrappers normalise leading batch dims, pad B to the sublane width and the
 output dim to the lane-block width, and slice the result back, so callers are
-shape-agnostic.
+shape-agnostic. ``quantized_matmul`` / ``quantized_matmul_fused`` remain as
+the historical single-format entry points, now thin shims over ``qmatmul``.
 """
 
 from __future__ import annotations
@@ -34,59 +41,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import QuantizedTensor
-from repro.kernels import autotune
-from repro.kernels.bcq_mm import bcq_mm as _bcq_mm
 from repro.kernels.bcq_mm_fused import _split
-from repro.kernels.lutgemm import lutgemm as _lutgemm
-from repro.kernels.ref import bcq_mm_ref as _bcq_mm_ref
-
-_SUBLANE = 8
-_LANE = 128
 
 
-def _resolve(impl: str, interpret: Optional[bool]) -> Tuple[str, bool]:
-    if impl == "auto":
-        impl = "bcq_mm" if jax.default_backend() == "tpu" else "ref"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return impl, interpret
+def qmatmul(
+    fmt,
+    x: jax.Array,
+    qt: QuantizedTensor,
+    out_dims: Optional[Sequence[int]] = None,
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> Tuple[jax.Array, ...]:
+    """``x (..., k)`` @ ``qt (k, o)`` through the registered format's kernels.
 
+    ``out_dims=None`` → the single-projection case, returned as a 1-tuple;
+    otherwise ``qt`` holds N output-fused projections (``sum(out_dims) ==
+    qt.o``) and one kernel pass returns N ``(..., o_i)`` slices.
 
-def _pad_o(packed, scales, o: int):
-    """Pad the output dim to the lane block when no candidate divides it."""
-    if any(o % c == 0 for c in autotune._CANDIDATE_O):
-        return packed, scales, o
-    pad = -o % _LANE
-    packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad)))
-    scales = jnp.pad(scales, ((0, 0), (0, 0), (0, pad)))
-    return packed, scales, o + pad
+    ``fmt`` is a registry name or a :class:`~repro.core.formats.QuantFormat`
+    instance (imported lazily — this module is the one seam below the format
+    registry, so the import edge must point registry → kernels, not back).
+    """
+    from repro.core.formats import get_format
 
+    f = get_format(fmt) if isinstance(fmt, str) else fmt
+    out_dims = (qt.o,) if out_dims is None else tuple(out_dims)
+    if sum(out_dims) != qt.o:
+        raise ValueError(f"out_dims {out_dims} do not sum to fused o={qt.o}")
+    impl, interpret = f.resolve_impl(impl, interpret)
+    out_dtype = out_dtype or x.dtype
 
-def _pallas_mm(xb, qt: QuantizedTensor, impl: str, interpret: bool) -> jax.Array:
-    """Padded (B, k) @ qt → (B, o_padded) f32 through the chosen Pallas kernel."""
-    packed, scales, o = _pad_o(qt.packed, qt.scales, qt.o)
-    B = xb.shape[0]
-    pad_b = -B % _SUBLANE
-    if pad_b:
-        xb = jnp.pad(xb, ((0, pad_b), (0, 0)))
-    block_k, block_o = autotune.get_blocks(
-        B=xb.shape[0], k=qt.k, o=o, q=qt.q, g=qt.g, impl=impl, interpret=interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if k != qt.k:
+        raise ValueError(f"x reduction dim {k} != weight k {qt.k}")
+    xb = x.reshape(-1, k)
+
+    if impl == "ref":
+        # materialise the reconstruction in x's dtype: bf16 activations get a
+        # bf16 dequant (serving path); f32 activations keep the f32 oracle
+        y = f.matmul(xb, qt, dtype=x.dtype)
+    else:
+        y = f.matvec(xb, qt, impl=impl, interpret=interpret)[:, : qt.o]
+    return tuple(
+        part.reshape(*lead, d).astype(out_dtype)
+        for part, d in zip(_split(y, out_dims), out_dims)
     )
-    if not block_k:
-        raise ValueError(f"k={qt.k} has no valid Pallas tiling (g={qt.g})")
-    if not block_o:
-        raise ValueError(f"o={o} has no valid Pallas tiling")
-    fn = {"bcq_mm": _bcq_mm, "lutgemm": _lutgemm}[impl]
-    y = fn(
-        xb,
-        packed,
-        scales,
-        g=qt.g,
-        block_k=block_k,
-        block_o=block_o,
-        interpret=interpret,
-    )
-    return y[:B]
 
 
 def quantized_matmul(
@@ -97,10 +99,9 @@ def quantized_matmul(
     interpret: Optional[bool] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """``x (..., k) @ qt (k, o)`` → ``(..., o)`` (the single-projection case
-    of :func:`quantized_matmul_fused`)."""
-    (y,) = quantized_matmul_fused(
-        x, qt, (qt.o,), impl=impl, interpret=interpret, out_dtype=out_dtype
+    """``x (..., k) @ qt (k, o)`` → ``(..., o)`` (single-projection shim)."""
+    (y,) = qmatmul(
+        qt.fmt, x, qt, impl=impl, interpret=interpret, out_dtype=out_dtype
     )
     return y
 
@@ -114,35 +115,10 @@ def quantized_matmul_fused(
     interpret: Optional[bool] = None,
     out_dtype=None,
 ) -> Tuple[jax.Array, ...]:
-    """``x (..., k)`` against N fused projections → N ``(..., o_i)`` outputs.
-
-    ``qt`` holds the projections concatenated along the output dim
-    (:func:`repro.core.fuse_tensors`); ``sum(out_dims) == qt.o``. One kernel
-    dispatch serves all N projections — the decode fast path for QKV and
-    gate-up (DESIGN.md §2.3).
-    """
-    out_dims = tuple(out_dims)
-    if sum(out_dims) != qt.o:
-        raise ValueError(f"out_dims {out_dims} do not sum to fused o={qt.o}")
-    impl, interpret = _resolve(impl, interpret)
-    out_dtype = out_dtype or x.dtype
-
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    if k != qt.k:
-        raise ValueError(f"x reduction dim {k} != weight k {qt.k}")
-    xb = x.reshape(-1, k)
-
-    if impl == "ref":
-        # materialise the reconstruction in x's dtype: bf16 activations get a
-        # bf16 dequant (serving path); f32 activations keep the f32 oracle
-        w = qt.dequantize(dtype=x.dtype)
-        y = jnp.dot(xb, w, preferred_element_type=jnp.float32)
-    else:
-        y = _pallas_mm(xb, qt, impl, interpret)[:, : qt.o]
-    return tuple(
-        part.reshape(*lead, d).astype(out_dtype)
-        for part, d in zip(_split(y, out_dims), out_dims)
+    """``x (..., k)`` against N fused projections → N ``(..., o_i)`` outputs
+    (fused-projection shim — the decode fast path for QKV and gate-up)."""
+    return qmatmul(
+        qt.fmt, x, qt, out_dims, impl=impl, interpret=interpret, out_dtype=out_dtype
     )
 
 
@@ -154,14 +130,15 @@ def linear(
     impl: str = "auto",
     out_dtype=None,
 ) -> jax.Array:
-    """Uniform linear layer: ``w`` is a dense (k, o) array OR a QuantizedTensor.
+    """Uniform linear layer: ``w`` is a dense (k, o) array OR a QuantizedTensor
+    of any registered format.
 
     Every linear in the model zoo routes through here — the paper's technique as
     a first-class, per-layer-switchable feature.
     """
     out_dtype = out_dtype or x.dtype
     if isinstance(w, QuantizedTensor):
-        y = quantized_matmul(x, w, impl=impl, out_dtype=out_dtype)
+        (y,) = qmatmul(w.fmt, x, w, impl=impl, out_dtype=out_dtype)
     else:
         y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
             out_dtype
@@ -187,7 +164,7 @@ def linear_fused(
     """
     out_dtype = out_dtype or x.dtype
     if isinstance(w, QuantizedTensor):
-        return quantized_matmul_fused(x, w, out_dims, impl=impl, out_dtype=out_dtype)
+        return qmatmul(w.fmt, x, w, out_dims, impl=impl, out_dtype=out_dtype)
     y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
         out_dtype
     )

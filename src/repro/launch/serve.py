@@ -20,6 +20,12 @@ t=0). ``--sequential`` instead serves the same workload as one-shot scanned
 ``generate`` calls in arrival order — the PR 1 fast path, kept as the
 baseline the scheduler is measured against (BENCH_serve.json).
 
+``--format {bcq,uniform,dequant}`` picks the registered quantization format
+(DESIGN.md §2.4): the paper's BCQ (default), FineQuant-style group-wise
+uniform int-q, or the dequantize-then-matmul baseline the paper benchmarks
+against — all three serve end-to-end through the identical scheduler/engine
+stack, so format comparisons isolate the kernel pipeline.
+
 ``--speculate q_draft:gamma`` turns decode dispatches into self-speculative
 chunks (DESIGN.md §5): a ``q_draft``-bit truncation of the same BCQ weights
 drafts ``gamma`` tokens per chunk and the full-precision model verifies them
@@ -52,6 +58,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.formats import format_names
 from repro.data import MarkovCorpus
 from repro.infer import Engine, Request, Scheduler, SpecConfig
 from repro.models import init_params, reduced
@@ -126,8 +133,16 @@ def drive_sequential(engine, reqs, arrivals):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
-    ap.add_argument("--q", type=int, default=4, help="BCQ bits (0 = dense)")
+    ap.add_argument("--q", type=int, default=4,
+                    help="quantization bits / code planes (0 = dense)")
     ap.add_argument("--g", type=int, default=128)
+    ap.add_argument("--format", choices=format_names(), default="bcq",
+                    help="registered quantization format (core/formats.py): "
+                         "'bcq' (the paper's LUT-GEMM format, supports "
+                         "--speculate), 'uniform' (FineQuant-style group-wise "
+                         "int-q), 'dequant' (same packing as uniform served "
+                         "through the explicit dequantize-then-matmul "
+                         "baseline the paper compares against)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4,
                     help="decode-batch width (concurrent requests)")
@@ -153,9 +168,17 @@ def main() -> None:
     args = ap.parse_args()
     if args.tp < 1:
         ap.error("--tp must be >= 1")
-    spec = SpecConfig.parse(args.speculate) if args.speculate else None
+    spec = None
+    if args.speculate:
+        try:
+            spec = SpecConfig.parse(args.speculate)
+        except ValueError as e:
+            ap.error(f"--speculate: {e}")
     if spec and not args.q:
         ap.error("--speculate requires a quantized model (--q > 0)")
+    if spec and args.format != "bcq":
+        ap.error(f"--speculate needs a truncation-capable format; "
+                 f"{args.format!r} has no nested low-bit draft (use --format bcq)")
     if spec and args.sequential:
         ap.error("--speculate drives the continuous-batching scheduler; "
                  "it cannot be combined with --sequential")
@@ -170,8 +193,11 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg)
     print(f"dense bytes: {quantized_bytes(params)/2**20:.2f} MiB")
     if args.q:
-        params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
-        print(f"BCQ q={args.q} g={args.g}: {quantized_bytes(params)/2**20:.2f} MiB")
+        params = quantize_params(
+            params, QuantPolicy(q=args.q, g=args.g, iters=4, fmt=args.format)
+        )
+        print(f"{args.format} q={args.q} g={args.g}: "
+              f"{quantized_bytes(params)/2**20:.2f} MiB")
 
     mesh = None
     if args.tp > 1:

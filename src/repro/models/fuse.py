@@ -32,6 +32,7 @@ from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
+from repro.core.formats import get_format
 from repro.core.qtensor import QuantizedTensor, fuse_tensors
 from repro.models.config import ModelConfig
 
@@ -43,6 +44,13 @@ def _fuse_leaves(leaves: Sequence) -> Optional[object]:
     if any(leaf is None for leaf in leaves):
         return None
     if all(isinstance(leaf, QuantizedTensor) for leaf in leaves):
+        # the format's `fuse` capability gates the fused-kernel path: leaves
+        # must share one registered format, and that format must support
+        # output-dim fusion (mixed-format triples keep the per-projection path)
+        if len({leaf.fmt for leaf in leaves}) != 1:
+            return None
+        if not get_format(leaves[0].fmt).supports_fuse:
+            return None
         try:
             return fuse_tensors(leaves)
         except ValueError:

@@ -1,8 +1,11 @@
 """Transformer building blocks (pure JAX, pytree params).
 
 Every weight application goes through :func:`repro.kernels.ops.linear`, so any
-leaf may be a dense array *or* a packed BCQ :class:`QuantizedTensor` — the
-paper's technique is a per-layer switch, not a separate model.
+leaf may be a dense array *or* a packed :class:`QuantizedTensor` of any
+registered quantization format (``core/formats.py``: BCQ, uniform int-q, the
+dequant baseline — dispatched per leaf through ``ops.qmatmul``) — the paper's
+technique is a per-layer switch, not a separate model, and formats mix freely
+within one forward (DESIGN.md §2.4).
 """
 
 from __future__ import annotations

@@ -329,16 +329,13 @@ def logits_spec(cfg: ModelConfig, ax: MeshAxes, batch: int) -> P:
 
 def qt_specs_like(dense_spec: P, qt: QuantizedTensor, ax: MeshAxes) -> QuantizedTensor:
     """Build a QuantizedTensor whose leaves are PartitionSpecs, matching the
-    dense weight's (possibly layer-stacked) spec ``(…lead, k_ax, o_ax)``."""
-    *lead, k_ax, o_ax = tuple(dense_spec)
-    kc = qt.packed.shape[-2]  # k/8 (possibly under leading stack dims)
-    kg = qt.scales.shape[-2]
-    k_packed = k_ax if (k_ax and _div(kc, ax.size(k_ax))) else None
-    k_scales = k_ax if (k_ax and _div(kg, ax.size(k_ax))) else None
-    return QuantizedTensor(
-        packed=P(*lead, None, k_packed, o_ax),
-        scales=P(*lead, None, k_scales, o_ax),
-        g=qt.g,
-        k=qt.k,
-        o=qt.o,
-    )
+    dense weight's (possibly layer-stacked) spec ``(…lead, k_ax, o_ax)``.
+
+    Thin shim over the format's ``tp_specs`` capability (DESIGN.md §2.4/§7):
+    the registered :class:`~repro.core.formats.QuantFormat` owns how its
+    packed planes and group scales follow the dense weight's sharding — the
+    shared-layout rule keeps scale groups WITH the k-rows they scale and
+    drops (replicates) any axis that does not divide."""
+    from repro.core.formats import get_format
+
+    return get_format(qt.fmt).tp_specs(dense_spec, qt, ax)

@@ -38,8 +38,10 @@ naming the leaf and the offending dims instead of quietly replicating (the
 ``_maybe`` fallback of the generic GSPMD rules) — under ``shard_map`` a
 silently replicated weight would be consumed as if it were a local shard and
 produce garbage, and a quietly-served replicated weight defeats the whole
-point of sharding. ``qt_specs_like`` still derives the packed/scales specs;
-this module only refuses to proceed when derivation had to drop an axis.
+point of sharding. Packed/scales spec derivation comes from the registered
+format (``QuantFormat.tp_specs`` — DESIGN.md §2.4, subsuming the old
+BCQ-only ``qt_specs_like`` group-divisibility logic); this module only
+refuses to proceed when derivation had to drop an axis.
 
 Entry point: :func:`shard_model` → ``(sharded_params, TPContext)``; the
 engine calls ``TPContext.forward`` everywhere it used ``models.forward``
@@ -56,11 +58,12 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.formats import get_format
 from repro.core.qtensor import QuantizedTensor
 from repro.models.config import ModelConfig
 from repro.parallel.compat import mesh_axis_names_sizes, shard_map
 from repro.parallel.ctx import tp_shard_region
-from repro.parallel.sharding import MeshAxes, cache_specs, qt_specs_like
+from repro.parallel.sharding import MeshAxes, cache_specs
 
 # leaves that split along the output dim (heads / FFN columns / vocab)
 _COLUMN_PARALLEL = frozenset(
@@ -132,12 +135,14 @@ def _qt_spec(path, qt: QuantizedTensor, ax: MeshAxes, kind: str) -> QuantizedTen
             hint=f"pick a group size dividing k/tp, i.e. g | {qt.k // n}",
         )
         dense = P(*([None] * lead), ax.model, None)
-    spec = qt_specs_like(dense, qt, ax)
+    # the format owns packed/scales spec derivation (QuantFormat.tp_specs —
+    # group scales shard WITH their k-row groups, axes dropped if indivisible)
+    spec = get_format(qt.fmt).tp_specs(dense, qt, ax)
     # belt-and-braces: qt_specs_like must not have dropped a required axis
     for plane, s in (("packed", spec.packed), ("scales", spec.scales)):
         if ax.model not in tuple(s):
             raise ValueError(
-                f"TP: qt_specs_like replicated the {plane} plane of {where} "
+                f"TP: {qt.fmt!r} tp_specs replicated the {plane} plane of {where} "
                 f"({dict(packed=qt.packed.shape, scales=qt.scales.shape)[plane]})"
                 " — the dims above should have caught this"
             )
@@ -163,7 +168,7 @@ def tp_param_specs(cfg: ModelConfig, params, ax: MeshAxes):
             return QuantizedTensor(
                 packed=P(*([None] * leaf.packed.ndim)),
                 scales=P(*([None] * leaf.scales.ndim)),
-                g=leaf.g, k=leaf.k, o=leaf.o,
+                g=leaf.g, k=leaf.k, o=leaf.o, fmt=leaf.fmt,
             )
         if name in _COLUMN_PARALLEL:
             _require_div(leaf.shape[-1], n, where, f"output dim {leaf.shape[-1]}")
@@ -208,7 +213,7 @@ def _permute_cols(leaf, out_dims: Tuple[int, ...], n: int, where: str):
     if isinstance(leaf, QuantizedTensor):
         return QuantizedTensor(
             packed=leaf.packed[..., idx], scales=leaf.scales[..., idx],
-            g=leaf.g, k=leaf.k, o=leaf.o,
+            g=leaf.g, k=leaf.k, o=leaf.o, fmt=leaf.fmt,
         )
     return leaf[..., idx]
 
@@ -258,14 +263,12 @@ def _relocalize(params):
 
     shard_map hands the body local ``packed``/``scales`` slices but the pytree
     statics still say the global shape; the kernels size their grids and
-    output slicing from the statics, so rebuild them from the local planes."""
+    output slicing from the statics, so rebuild them from the local planes
+    (the format owns the packed-rows → k relation: ``QuantFormat.relocalize``)."""
 
     def fix(leaf):
         if isinstance(leaf, QuantizedTensor):
-            return QuantizedTensor(
-                packed=leaf.packed, scales=leaf.scales, g=leaf.g,
-                k=leaf.packed.shape[-2] * 8, o=leaf.packed.shape[-1],
-            )
+            return get_format(leaf.fmt).relocalize(leaf)
         return leaf
 
     return jax.tree.map(fix, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))

@@ -1,9 +1,11 @@
-"""Walk a model param pytree and quantize its linear weights to BCQ.
+"""Walk a model param pytree and quantize its linear weights.
 
-``QuantPolicy`` expresses the paper's search space: one global ``(q, g)`` or a
-*mixed-precision* assignment per sublayer type (attention vs FFN vs LM head —
-paper §V.A / Fig. 12, "all matrices of the same sub-layer type share a (q,g)
-configuration").
+``QuantPolicy`` expresses the paper's search space plus the format registry:
+one global ``(q, g, fmt)`` or a *mixed* assignment per sublayer type
+(attention vs FFN vs LM head — paper §V.A / Fig. 12, "all matrices of the
+same sub-layer type share a (q,g) configuration"; per-path entries may also
+pick a different registered format, e.g. BCQ attention + uniform FFN, for
+mixed-format models — DESIGN.md §2.4).
 
 ``quantize_params`` produces real packed weights; ``quantized_structs``
 produces the same pytree with ShapeDtypeStruct leaves (for dry-run lowering of
@@ -19,11 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bcq import quantize_bcq, quantize_bcq_greedy
-from repro.core.packing import pack_signs
+from repro.core.formats import get_format
 from repro.core.qtensor import QuantizedTensor
 
-# leaves eligible for BCQ (2D (k,o) matmul weights, possibly layer/expert-stacked)
+# leaves eligible for quantization (2D (k,o) matmul weights, possibly
+# layer/expert-stacked)
 _QUANT_NAMES = frozenset(
     {
         "wq", "wk", "wv", "wo",  # attention
@@ -38,19 +40,23 @@ _MIN_DIM = 128  # skip tiny projections (e.g. mLSTM per-head gate (inner, 4))
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    """(q, g) per sublayer type. ``None`` → use default; g adapts to each k."""
+    """(q, g[, fmt]) per sublayer type. ``None`` → use defaults; g adapts to
+    each k. Per-path entries are 2-tuples ``(q, g)`` (inheriting ``fmt``) or
+    3-tuples ``(q, g, fmt)`` for mixed-format models."""
 
     q: int = 4
     g: int = 128
-    attn: Optional[Tuple[int, int]] = None  # (q, g) for attention projections
-    ffn: Optional[Tuple[int, int]] = None  # (q, g) for MLP/MoE/recurrent linears
-    lm_head: Optional[Tuple[int, int]] = None
+    attn: Optional[Tuple] = None  # (q, g[, fmt]) for attention projections
+    ffn: Optional[Tuple] = None  # (q, g[, fmt]) for MLP/MoE/recurrent linears
+    lm_head: Optional[Tuple] = None
     skip_lm_head: bool = False
-    method: str = "alternating"  # "alternating" | "greedy"
+    method: str = "alternating"  # "alternating" | "greedy" (BCQ solvers)
     iters: int = 8
     scale_dtype: str = "bfloat16"
+    fmt: str = "bcq"  # default registered format (core/formats.py)
 
-    def resolve(self, path_keys: Tuple[str, ...]) -> Optional[Tuple[int, int]]:
+    def resolve(self, path_keys: Tuple[str, ...]) -> Optional[Tuple]:
+        """The raw per-path entry (2- or 3-tuple), or the (q, g) defaults."""
         name = path_keys[-1]
         if name not in _QUANT_NAMES:
             return None
@@ -61,6 +67,15 @@ class QuantPolicy:
         if "attn" in path_keys:
             return self.attn or (self.q, self.g)
         return self.ffn or (self.q, self.g)
+
+    def resolve_fmt(self, path_keys: Tuple[str, ...]) -> Optional[Tuple[int, int, str]]:
+        """Fully-resolved ``(q, g, fmt)`` for a leaf path (None → ineligible)."""
+        qg = self.resolve(path_keys)
+        if qg is None:
+            return None
+        if len(qg) == 2:
+            return (qg[0], qg[1], self.fmt)
+        return (qg[0], qg[1], qg[2])
 
 
 def _effective_g(k: int, g: int) -> int:
@@ -96,34 +111,43 @@ def _eligible(leaf, qg) -> bool:
     )
 
 
-def _quantize_leaf(leaf: jax.Array, q: int, g: int, policy: QuantPolicy) -> QuantizedTensor:
+def _quantize_leaf(
+    leaf: jax.Array, q: int, g: int, fmt: str, policy: QuantPolicy
+) -> QuantizedTensor:
     *lead, k, o = leaf.shape
     g_eff = _effective_g(k, g)
     if not g_eff:
         raise ValueError(f"no valid group size for k={k} (requested g={g})")
+    fobj = get_format(fmt)
     flat = leaf.reshape(-1, k, o).astype(jnp.float32)
 
     def one(w):
-        if policy.method == "alternating":
-            scales, binary = quantize_bcq(w, q=q, g=g_eff, iters=policy.iters)
-        else:
-            scales, binary = quantize_bcq_greedy(w, q=q, g=g_eff)
-        return pack_signs(binary), scales.astype(jnp.dtype(policy.scale_dtype))
+        qt = fobj.quantize(
+            w,
+            q=q,
+            g=g_eff,
+            scale_dtype=jnp.dtype(policy.scale_dtype),
+            method=policy.method,
+            iters=policy.iters,
+        )
+        return qt.packed, qt.scales
 
     packed, scales = jax.lax.map(one, flat)
-    packed = packed.reshape(*lead, q, k // 8, o)
-    scales = scales.reshape(*lead, q, k // g_eff, o)
-    return QuantizedTensor(packed=packed, scales=scales, g=g_eff, k=k, o=o)
+    packed = packed.reshape(*lead, *packed.shape[1:])
+    scales = scales.reshape(*lead, *scales.shape[1:])
+    return QuantizedTensor(
+        packed=packed, scales=scales, g=g_eff, k=k, o=o, fmt=fmt
+    )
 
 
 def quantize_params(params, policy: QuantPolicy):
     """Replace every eligible dense leaf with a packed QuantizedTensor."""
 
     def visit(path, leaf):
-        qg = policy.resolve(_path_names(path))
-        if not _eligible(leaf, qg):
+        qgf = policy.resolve_fmt(_path_names(path))
+        if not _eligible(leaf, qgf):
             return leaf
-        return _quantize_leaf(leaf, qg[0], qg[1], policy)
+        return _quantize_leaf(leaf, qgf[0], qgf[1], qgf[2], policy)
 
     return jax.tree_util.tree_map_with_path(visit, params)
 
@@ -133,21 +157,25 @@ def truncate_params(params, q_draft: int):
 
     The cheap-draft side of self-speculative decoding (infer/speculative.py):
     packed planes and scales are sliced to the first ``min(q_draft, q)``
-    (:meth:`QuantizedTensor.truncate` — BCQ's planes are successive residual
-    refinements, so the prefix is itself a valid lower-bit model). Every other
-    leaf — norms, embeddings, dense (unquantized) linears — is returned *as
-    is*, shared by reference with the full-precision tree: the draft costs no
-    extra weight memory beyond what the slices materialise.
+    (the format's ``truncate`` capability — BCQ's planes are successive
+    residual refinements, so the prefix is itself a valid lower-bit model).
+    Every other leaf — norms, embeddings, dense (unquantized) linears — is
+    returned *as is*, shared by reference with the full-precision tree: the
+    draft costs no extra weight memory beyond what the slices materialise.
 
     Works on fused decode trees too (truncation slices the q axis, which
     fusion never touches), so the engine truncates its post-`fuse` params.
+
+    Raises a ``ValueError`` naming the format when any quantized leaf's
+    format lacks the truncate capability (uniform/dequant codes are not
+    residual-nested — there is no valid draft hiding inside them).
     """
     if q_draft < 1:
         raise ValueError(f"q_draft must be >= 1, got {q_draft}")
 
     def visit(leaf):
         if isinstance(leaf, QuantizedTensor):
-            return leaf.truncate(min(q_draft, leaf.q))
+            return get_format(leaf.fmt).truncate(leaf, min(q_draft, leaf.q))
         return leaf
 
     return jax.tree.map(
@@ -159,20 +187,14 @@ def quantized_structs(param_structs, policy: QuantPolicy):
     """Same tree surgery, but on ShapeDtypeStructs (no data, no compute)."""
 
     def visit(path, leaf):
-        qg = policy.resolve(_path_names(path))
-        if not _eligible(leaf, qg):
+        qgf = policy.resolve_fmt(_path_names(path))
+        if not _eligible(leaf, qgf):
             return leaf
         *lead, k, o = leaf.shape
-        q, g = qg
+        q, g, fmt = qgf
         g_eff = _effective_g(k, g)
-        return QuantizedTensor(
-            packed=jax.ShapeDtypeStruct((*lead, q, k // 8, o), jnp.uint8),
-            scales=jax.ShapeDtypeStruct(
-                (*lead, q, k // g_eff, o), jnp.dtype(policy.scale_dtype)
-            ),
-            g=g_eff,
-            k=k,
-            o=o,
+        return get_format(fmt).struct(
+            tuple(lead), k, o, q, g_eff, jnp.dtype(policy.scale_dtype)
         )
 
     return jax.tree_util.tree_map_with_path(visit, param_structs)

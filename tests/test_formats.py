@@ -1,0 +1,410 @@
+"""Pluggable quantization-format API (core/formats.py, DESIGN.md §2.4).
+
+Per-format property tests (pack→dequant round-trip bounds, nbytes
+accounting, registry errors), the cross-format differential (greedy tokens
+for ``dequant`` vs ``uniform`` at the same (q, g) are bit-identical — same
+packing, different kernel pipeline), capability gating (truncate/fuse), and
+the temperature-guard regression for ``Engine._sample`` / ``Request``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    QuantizedTensor,
+    format_names,
+    get_format,
+    pack_codes,
+    quantize_tensor,
+    unpack_codes,
+)
+from repro.data import MarkovCorpus
+from repro.infer import Engine, Request, Scheduler, SpecConfig
+from repro.infer.engine import _sample
+from repro.kernels import qmatmul
+from repro.kernels.autotune import get_blocks, make_key
+from repro.models import init_params, reduced
+from repro.quant import (
+    QuantPolicy,
+    quantize_params,
+    quantized_structs,
+    truncate_params,
+)
+
+KEY = jax.random.PRNGKey(0)
+FORMATS = ("bcq", "uniform", "dequant")
+
+
+def _w(rng, k=256, o=128):
+    return jnp.asarray(rng.standard_normal((k, o)), jnp.float32)
+
+
+def _small_cfg():
+    return reduced(
+        get_config("llama3.2-3b"), d_model=256, n_kv_heads=4, d_ff=512
+    )
+
+
+def _prompts(cfg, b, s, seed=3):
+    return MarkovCorpus(cfg.vocab, seed=seed).sample(b, s, seed=7)[:, :s].astype(
+        np.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_lookup():
+    assert set(FORMATS) <= set(format_names())
+    for name in FORMATS:
+        assert get_format(name).name == name
+    with pytest.raises(ValueError, match="unknown quantization format"):
+        get_format("nope")
+    # the error names the registered formats so the fix is self-evident
+    with pytest.raises(ValueError, match="bcq"):
+        get_format("int3")
+
+
+def test_quantize_tensor_tags_format(rng):
+    w = _w(rng)
+    for fmt in FORMATS:
+        qt = quantize_tensor(w, q=4, g=64, method="greedy", fmt=fmt)
+        assert qt.fmt == fmt
+        assert qt.shape == (256, 128)
+        assert qt.format() is get_format(fmt)
+
+
+# ---------------------------------------------------------------------------
+# pack → dequant round trips
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_codes_roundtrip(rng):
+    for q in (2, 4, 8):
+        codes = jnp.asarray(rng.integers(0, 2**q, (64, 24)), jnp.uint8)
+        packed = pack_codes(codes, q)
+        assert packed.shape == (q, 8, 24)
+        assert packed.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(unpack_codes(packed)), codes)
+
+
+def test_uniform_roundtrip_error_bound(rng):
+    """Affine group quantization: |w - ŵ| <= scale/2 per element (f32 scales),
+    with scale = (max - min) / (2^q - 1) per (group, column)."""
+    w = _w(rng, k=256, o=64)
+    g = 64
+    for q in (2, 4, 8):
+        qt = quantize_tensor(w, q=q, g=g, scale_dtype=jnp.float32, fmt="uniform")
+        w_hat = qt.dequantize()
+        grouped = np.asarray(w).reshape(256 // g, g, 64)
+        scale = np.maximum(
+            (grouped.max(1) - grouped.min(1)) / (2**q - 1), 1e-8
+        )  # (G, o)
+        err = np.abs(np.asarray(w_hat) - np.asarray(w)).reshape(256 // g, g, 64)
+        assert np.all(err <= scale[:, None, :] * 0.5 + 1e-5), f"q={q}"
+
+
+def test_roundtrip_error_monotone_in_q(rng):
+    w = _w(rng)
+    for fmt in ("bcq", "uniform"):
+        errs = []
+        for q in (2, 4, 8):
+            qt = quantize_tensor(
+                w, q=q, g=64, method="greedy", scale_dtype=jnp.float32, fmt=fmt
+            )
+            errs.append(
+                float(jnp.linalg.norm(qt.dequantize() - w) / jnp.linalg.norm(w))
+            )
+        assert errs[0] > errs[1] > errs[2], (fmt, errs)
+
+
+# ---------------------------------------------------------------------------
+# nbytes accounting
+# ---------------------------------------------------------------------------
+
+
+def test_nbytes_accounting(rng):
+    k, o, q, g = 256, 128, 4, 64
+    w = _w(rng, k, o)
+    for dtype, itemsize in ((jnp.float32, 4), (jnp.bfloat16, 2)):
+        bcq = quantize_tensor(w, q=q, g=g, method="greedy", scale_dtype=dtype)
+        assert bcq.nbytes() == q * (k // 8) * o + q * (k // g) * o * itemsize
+        uni = quantize_tensor(w, q=q, g=g, scale_dtype=dtype, fmt="uniform")
+        assert uni.nbytes() == q * (k // 8) * o + 2 * (k // g) * o * itemsize
+        # dequant shares uniform's packing byte-for-byte
+        deq = quantize_tensor(w, q=q, g=g, scale_dtype=dtype, fmt="dequant")
+        assert deq.nbytes() == uni.nbytes()
+        np.testing.assert_array_equal(np.asarray(deq.packed), np.asarray(uni.packed))
+
+
+# ---------------------------------------------------------------------------
+# kernels vs ref oracle (incl. the lane-padding path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("o", [128, 136])  # 136: no candidate block divides → pad
+def test_kernel_matches_ref(rng, fmt, o):
+    w = _w(rng, 256, o)
+    x = jnp.asarray(rng.standard_normal((3, 256)), jnp.float32)
+    qt = quantize_tensor(w, q=3, g=64, method="greedy", scale_dtype=jnp.float32, fmt=fmt)
+    (y_ref,) = qmatmul(fmt, x, qt, impl="ref")
+    for impl in get_format(fmt).impls:
+        (y,) = qmatmul(fmt, x, qt, impl=impl, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+
+def test_unknown_impl_names_available(rng):
+    qt = quantize_tensor(_w(rng), q=2, g=64, method="greedy", fmt="uniform")
+    x = jnp.ones((1, 256), jnp.float32)
+    with pytest.raises(ValueError, match="uniform_mm"):
+        qmatmul("uniform", x, qt, impl="lutgemm", interpret=True)
+
+
+def test_autotune_keys_carry_impl():
+    """Per-format winners live under distinct table keys (the impl axis)."""
+    k1 = make_key(8, 256, 128, 4, 64, "bcq_mm", "cpu-interpret")
+    k2 = make_key(8, 256, 128, 4, 64, "uniform_mm", "cpu-interpret")
+    assert k1 != k2
+    bk, bo = get_blocks(
+        B=8, k=256, o=128, q=4, g=64, impl="uniform_mm", interpret=True
+    )
+    assert bk and 256 % bk == 0 and bo and 128 % bo == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-format differential: dequant vs uniform
+# ---------------------------------------------------------------------------
+
+
+def test_dequant_matmul_bitwise_equals_uniform_ref(rng):
+    """Same packing + same reconstruction math → the ref paths are the same
+    computation, bit for bit."""
+    w = _w(rng)
+    x = jnp.asarray(rng.standard_normal((2, 256)), jnp.float32)
+    qu = quantize_tensor(w, q=4, g=64, scale_dtype=jnp.float32, fmt="uniform")
+    qd = quantize_tensor(w, q=4, g=64, scale_dtype=jnp.float32, fmt="dequant")
+    (yu,) = qmatmul("uniform", x, qu, impl="ref")
+    (yd,) = qmatmul("dequant", x, qd, impl="ref")
+    np.testing.assert_array_equal(np.asarray(yu), np.asarray(yd))
+
+
+def test_cross_format_greedy_tokens_identical():
+    """The acceptance differential: a dequant-served model and a uniform-served
+    model at the same (q, g) emit bit-identical greedy tokens end to end."""
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    prompts = _prompts(cfg, 2, 6)
+    toks = {}
+    for fmt in ("uniform", "dequant"):
+        qp = quantize_params(params, QuantPolicy(q=4, g=64, iters=2, fmt=fmt))
+        toks[fmt] = Engine(cfg, qp, max_seq=32).generate(prompts, 8).tokens
+    np.testing.assert_array_equal(toks["uniform"], toks["dequant"])
+
+
+# ---------------------------------------------------------------------------
+# capabilities: fuse + truncate
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_fused_decode_matches_unfused():
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    qp = quantize_params(params, QuantPolicy(q=4, g=64, iters=2, fmt="uniform"))
+    prompts = _prompts(cfg, 2, 6)
+    fused = Engine(cfg, qp, max_seq=32, fuse=True).generate(prompts, 8)
+    unfused = Engine(cfg, qp, max_seq=32, fuse=False).generate(prompts, 8)
+    np.testing.assert_array_equal(fused.tokens, unfused.tokens)
+
+
+def test_fuse_refuses_mixed_formats(rng):
+    from repro.core import fuse_tensors
+
+    w = _w(rng)
+    qa = quantize_tensor(w, q=4, g=64, method="greedy", fmt="bcq")
+    qb = quantize_tensor(w, q=4, g=64, fmt="uniform")
+    with pytest.raises(ValueError, match="format mismatch"):
+        fuse_tensors([qa, qb])
+
+
+def test_truncate_capability_gating(rng):
+    qt = quantize_tensor(_w(rng), q=4, g=64, fmt="uniform")
+    with pytest.raises(ValueError, match="truncation"):
+        qt.truncate(2)
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    qp = quantize_params(params, QuantPolicy(q=4, g=64, iters=2, fmt="uniform"))
+    with pytest.raises(ValueError, match="truncat"):
+        truncate_params(qp, 2)
+    eng = Engine(cfg, qp, max_seq=32)
+    with pytest.raises(ValueError, match="bcq"):
+        eng.generate(_prompts(cfg, 1, 6), 4, speculate=SpecConfig(2, 2))
+    with pytest.raises(ValueError, match="bcq"):
+        eng.init_slots(2, speculate=SpecConfig(2, 2))
+
+
+def test_bcq_truncate_preserves_format(rng):
+    qt = quantize_tensor(_w(rng), q=4, g=64, method="greedy")
+    qd = qt.truncate(2)
+    assert qd.fmt == "bcq" and qd.q == 2
+
+
+# ---------------------------------------------------------------------------
+# policies: mixed formats + struct trees
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_format_policy_resolution():
+    pol = QuantPolicy(q=4, g=128, attn=(2, 64, "uniform"), ffn=(4, 128))
+    # legacy resolve keeps returning the raw entries (2-tuples stay 2-tuples)
+    assert pol.resolve(("stages", "0", "b0", "mlp", "w_up")) == (4, 128)
+    assert pol.resolve_fmt(("stages", "0", "b0", "attn", "wq")) == (2, 64, "uniform")
+    assert pol.resolve_fmt(("stages", "0", "b0", "mlp", "w_up")) == (4, 128, "bcq")
+    assert pol.resolve_fmt(("lm_head",)) == (4, 128, "bcq")
+    assert pol.resolve_fmt(("stages", "0", "b0", "ln1")) is None
+
+
+def test_mixed_format_model_decodes():
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    qp = quantize_params(
+        params,
+        QuantPolicy(q=4, g=64, iters=2, attn=(4, 64, "uniform"), ffn=(3, 64, "bcq")),
+    )
+    fmts = {
+        leaf.fmt
+        for leaf in jax.tree.leaves(
+            qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+        )
+        if isinstance(leaf, QuantizedTensor)
+    }
+    assert fmts == {"uniform", "bcq"}
+    res = Engine(cfg, qp, max_seq=32).generate(_prompts(cfg, 1, 6), 6)
+    assert res.tokens.shape == (1, 12)
+
+
+def test_quantized_structs_per_format():
+    cfg = _small_cfg()
+    structs = jax.eval_shape(lambda: init_params(KEY, cfg))
+    for fmt, s_lead in (("bcq", 4), ("uniform", 2), ("dequant", 2)):
+        qs = quantized_structs(structs, QuantPolicy(q=4, g=64, fmt=fmt))
+        leaves = [
+            l
+            for l in jax.tree.leaves(
+                qs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+            )
+            if isinstance(l, QuantizedTensor)
+        ]
+        assert leaves, fmt
+        for qt in leaves:
+            assert qt.fmt == fmt
+            assert qt.packed.shape[-3] == 4
+            assert qt.packed.shape[-2] == qt.k // 8
+            assert qt.scales.shape[-3] == s_lead
+
+
+# ---------------------------------------------------------------------------
+# TP placement via QuantFormat.tp_specs
+# ---------------------------------------------------------------------------
+
+
+def test_tp_specs_from_format(rng):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import decode_tp_axes
+
+    ax = decode_tp_axes(2)
+    qt = quantize_tensor(_w(rng, 256, 128), q=4, g=64, fmt="uniform")
+    spec = get_format("uniform").tp_specs(P("model", None), qt, ax)
+    assert spec.fmt == "uniform"
+    # k/8 = 32 and k/g = 4 both divide tp=2 → packed AND scales shard with k
+    assert tuple(spec.packed) == (None, "model", None)
+    assert tuple(spec.scales) == (None, "model", None)
+    # an indivisible scale-group dim is dropped (caller decides to refuse)
+    qt_odd = quantize_tensor(_w(rng, 192, 128), q=4, g=96, fmt="uniform")
+    ax4 = decode_tp_axes(4)
+    spec_odd = get_format("uniform").tp_specs(P("model", None), qt_odd, ax4)
+    assert tuple(spec_odd.scales) == (None, None, None)  # k/g = 2, tp = 4
+
+
+def test_relocalize_from_format(rng):
+    qt = quantize_tensor(_w(rng, 256, 128), q=4, g=64, fmt="uniform")
+    half = QuantizedTensor(
+        packed=qt.packed[:, :16], scales=qt.scales[:, :2],
+        g=qt.g, k=qt.k, o=qt.o, fmt=qt.fmt,
+    )
+    local = get_format("uniform").relocalize(half)
+    assert (local.k, local.o, local.fmt) == (128, 128, "uniform")
+
+
+# ---------------------------------------------------------------------------
+# temperature-guard regression (Engine._sample / Request)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_zero_temperature_falls_back_to_argmax(rng):
+    logits = jnp.asarray(rng.standard_normal((3, 17)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    toks = _sample(logits, key, jnp.float32(0.0), greedy=False)
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.asarray(jnp.argmax(logits, -1))
+    )
+    # and under jit with a traced temperature (the scan-body situation)
+    toks_jit = jax.jit(lambda lg, k, t: _sample(lg, k, t, greedy=False))(
+        logits, key, jnp.float32(0.0)
+    )
+    np.testing.assert_array_equal(np.asarray(toks_jit), np.asarray(toks))
+    # positive temperatures keep the exact pre-guard stream
+    t = jnp.float32(0.7)
+    np.testing.assert_array_equal(
+        np.asarray(_sample(logits, key, t, greedy=False)),
+        np.asarray(jax.random.categorical(key, logits / t)),
+    )
+
+
+def test_request_validates_temperature():
+    prompt = np.arange(4, dtype=np.int32)
+    with pytest.raises(ValueError, match="finite"):
+        Request(prompt=prompt, max_new_tokens=2, temperature=float("nan"))
+    with pytest.raises(ValueError, match=">= 0"):
+        Request(prompt=prompt, max_new_tokens=2, temperature=-1.0)
+    assert Request(prompt=prompt, max_new_tokens=2, temperature=0.0).temperature == 0.0
+
+
+def test_spec_parse_error_names_syntax():
+    with pytest.raises(ValueError, match="QD:GAMMA"):
+        SpecConfig.parse("nope")
+    with pytest.raises(ValueError, match="QD:GAMMA"):
+        SpecConfig.parse("2:4:6")
+    with pytest.raises(ValueError, match="QD:GAMMA"):
+        SpecConfig.parse("0:4")  # out-of-range still names the syntax
+
+
+# ---------------------------------------------------------------------------
+# serving e2e: every format through the scheduler
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_scheduler_serves_format(fmt):
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    qp = quantize_params(params, QuantPolicy(q=3, g=64, iters=2, fmt=fmt))
+    eng = Engine(cfg, qp, max_seq=32)
+    prompts = _prompts(cfg, 2, 6)
+    sched = Scheduler(eng, n_slots=2, chunk=4)
+    rids = [
+        sched.submit(Request(prompt=prompts[i], max_new_tokens=6, seed=i))
+        for i in range(2)
+    ]
+    done = {c.rid: c for c in sched.run()}
+    for i, rid in enumerate(rids):
+        solo = eng.generate(prompts[i : i + 1], 6)
+        np.testing.assert_array_equal(
+            done[rid].new_tokens, solo.tokens[0, 6:], err_msg=fmt
+        )
