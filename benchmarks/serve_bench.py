@@ -10,6 +10,19 @@ PR 1 fast path). Two arrival regimes:
   regime the paper's serving workload (§V, OPT token generation) lives in:
   the queue stays non-empty, so the win is batch-feeding, not queueing tricks.
 
+ISSUE 6 adds the request-lifecycle regimes on top (the hardened scheduler's
+operating envelope, not just its happy-path throughput):
+
+- ``heavytail`` — Lomax/Pareto arrivals at the same mean rate as the Poisson
+  trace but with bursty clumps and long gaps; reports TTFT/TPOT p50/p95/p99
+  from the scheduler's own lifecycle records;
+- ``cancel sweep`` — a fraction of requests is cancelled right after its
+  first streamed token; survivor throughput and reclaimed-slot utilisation
+  show cancellation freeing capacity instead of wasting it;
+- ``bounded queue`` — a burst twice the queue bound with tight TTFT
+  deadlines: overflow rejects loudly at submit, stale queue entries are shed
+  before wasting a prefill, and the served remainder keeps its latency.
+
 Both paths are warmed first so XLA compiles (per prompt-length/budget shape)
 stay out of the timings. CPU-host numbers are functional sanity, not TPU
 claims (benchmarks/common.py).
@@ -28,11 +41,12 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.infer import Engine, Scheduler
+from repro.infer import Engine, QueueFullError, Scheduler
 from repro.launch.serve import (
     build_requests,
     drive_continuous,
     drive_sequential,
+    pareto_arrivals,
     poisson_arrivals,
 )
 from repro.models import init_params, reduced
@@ -65,6 +79,54 @@ def _warmup(cfg, engine):
         for r in reqs:
             sched.submit(r)
         sched.run()
+
+
+def drive_hardened(
+    engine,
+    reqs,
+    arrivals,
+    *,
+    n_slots,
+    chunk,
+    cancel_idx=(),
+    max_queue=None,
+):
+    """Lifecycle-aware serve loop: like ``drive_continuous`` but tolerant of
+    requests that never produce a Completion (cancelled / shed / rejected).
+    Requests whose index is in ``cancel_idx`` are cancelled right after their
+    first streamed token (a client hitting stop). Returns
+    (scheduler, completions, makespan_s, n_rejected)."""
+    watch = set()
+    sched = Scheduler(
+        engine,
+        n_slots=n_slots,
+        chunk=chunk,
+        max_queue=max_queue,
+        on_tokens=lambda rid, toks: (
+            sched.cancel(rid, "client stop after first token")
+            if rid in watch
+            else None
+        ),
+    )
+    done, rejected, i = [], 0, 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            try:
+                rid = sched.submit(reqs[i])
+                if i in cancel_idx:
+                    watch.add(rid)
+            except QueueFullError:
+                rejected += 1
+            i += 1
+        if sched.idle:
+            if i >= len(reqs):
+                break
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+            continue
+        done.extend(sched.step())
+    return sched, done, time.perf_counter() - t0, rejected
 
 
 def main() -> None:
@@ -141,6 +203,102 @@ def main() -> None:
     assert speedup > 1.0, (
         "acceptance: continuous batching must beat sequential one-shot "
         f"generate at >=4 slots (got {speedup:.2f}x)"
+    )
+
+    def pct_row(name, sched, extra=""):
+        """TTFT/TPOT percentiles from the scheduler's lifecycle records."""
+        s = sched.summary()
+        ttft, tpot = s["ttft_s"], s["tpot_s"]
+        by = ";".join(f"{k}={v}" for k, v in sorted(s["by_state"].items()))
+        rows.append(
+            {
+                "name": name,
+                "tokens_per_s": None,
+                "makespan_s": None,
+                "derived": (
+                    f"ttft_p50={ttft['p50']:.3f}s;ttft_p95={ttft['p95']:.3f}s;"
+                    f"ttft_p99={ttft['p99']:.3f}s;tpot_p50={tpot['p50'] * 1e3:.1f}ms;"
+                    f"tpot_p95={tpot['p95'] * 1e3:.1f}ms;{by}{extra}"
+                ),
+            }
+        )
+        print(f"{name}: ttft p50/p95/p99 = {ttft['p50']:.3f}/"
+              f"{ttft['p95']:.3f}/{ttft['p99']:.3f}s ({by}{extra})")
+
+    # -- heavy-tail (Lomax) arrivals at the same mean rate as the Poisson
+    # trace: bursty clumps + long gaps is where tail latency lives ----------
+    arrivals_ht = pareto_arrivals(N_REQUESTS, rate, alpha=1.5, seed=2)
+    sched, done, dt, _ = drive_hardened(
+        engine, build_requests(cfg, N_REQUESTS, PROMPT_LEN, GEN),
+        arrivals_ht, n_slots=4, chunk=CHUNK,
+    )
+    record(f"serve/continuous_slots4/heavytail_{rate:.1f}rps", dt,
+           extra=f";chunk={CHUNK};alpha=1.5")
+    pct_row(f"serve/latency_slots4/heavytail_{rate:.1f}rps", sched)
+
+    # -- cancellation-rate sweep: cancel right after the first token --------
+    for frac in (0.25, 0.5):
+        n_cancel = int(N_REQUESTS * frac)
+        sched, done, dt, _ = drive_hardened(
+            engine, build_requests(cfg, N_REQUESTS, PROMPT_LEN, GEN),
+            np.zeros(N_REQUESTS), n_slots=4, chunk=CHUNK,
+            cancel_idx=set(range(0, N_REQUESTS, max(1, N_REQUESTS // n_cancel)))
+            if n_cancel else set(),
+        )
+        served = sum(len(c.new_tokens) for c in done)
+        tps = served / dt
+        rows.append(
+            {
+                "name": f"serve/cancel_sweep_{int(frac * 100)}pct/burst",
+                "tokens_per_s": round(tps, 2),
+                "makespan_s": round(dt, 3),
+                "derived": (
+                    f"cancelled={sched.counters['cancelled']};survivors="
+                    f"{len(done)};survivor_tokens={served};chunk={CHUNK}"
+                ),
+            }
+        )
+        print(f"cancel {int(frac * 100)}%: {tps:.1f} survivor tok/s, "
+              f"{sched.counters['cancelled']} cancelled, makespan {dt:.2f}s")
+
+    # -- bounded admission queue under sustained 2x overload with tight TTFT
+    # deadlines: loud rejects when the queue is full, deadline-aware shedding
+    # of entries that aged out while waiting, and the served remainder keeps
+    # its latency ------------------------------------------------------------
+    over = build_requests(cfg, 2 * N_REQUESTS, PROMPT_LEN, GEN)
+    ttft_deadline = 0.35
+    for r in over:
+        r.ttft_deadline_s = ttft_deadline
+    # arrivals at ~2x the measured continuous service rate: the queue
+    # saturates gradually, so both overflow AND aging are exercised (a t=0
+    # burst would only ever reject)
+    overload_rps = 2.0 * cont_tps[4] / GEN
+    arrivals_ov = poisson_arrivals(len(over), overload_rps, seed=5)
+    sched, done, dt, rejected = drive_hardened(
+        engine, over, arrivals_ov, n_slots=4, chunk=CHUNK,
+        max_queue=N_REQUESTS // 2,
+    )
+    c = sched.counters
+    n_timeout = c["timed_out"]
+    rows.append(
+        {
+            "name": f"serve/bounded_queue_overload_{overload_rps:.1f}rps",
+            "tokens_per_s": round(sum(len(x.new_tokens) for x in done) / dt, 2),
+            "makespan_s": round(dt, 3),
+            "derived": (
+                f"offered={len(over)};max_queue={N_REQUESTS // 2};"
+                f"rejected={rejected};shed={c['shed']};timed_out={n_timeout};"
+                f"finished={len(done)};ttft_deadline={ttft_deadline}s"
+            ),
+        }
+    )
+    print(f"bounded queue @{overload_rps:.1f}rps: {rejected} rejected, "
+          f"{c['shed']} shed, {n_timeout} timed out, {len(done)} finished "
+          f"in {dt:.2f}s")
+    pct_row("serve/latency_bounded_queue_overload", sched)
+    assert rejected + c["shed"] + n_timeout + len(done) == len(over), (
+        "lifecycle leak: every offered request must be rejected, shed, "
+        "timed out or finished"
     )
 
     out = os.path.abspath(args.out)

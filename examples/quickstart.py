@@ -43,6 +43,28 @@ greedy tokens bit-identical to the single-device engine::
 (group size caveat: row-parallel weights need ``(k/g) % tp == 0`` so scale
 groups shard with their k-rows — the engine raises naming the leaf if not;
 ``examples/serve_quantized.py --tp N`` demos the same end-to-end.)
+
+Real clients stream over the async front end (DESIGN.md §9): a WebSocket
+server with per-request state machines, cancellation (disconnect = cancel),
+TTFT/total deadlines, bounded-queue backpressure and TTFT/TPOT percentile
+metrics — the scheduler's hardening guarantees that whatever happens to one
+request (cancel, timeout, injected fault, NaN row), every *surviving*
+request's tokens stay bit-identical to an undisturbed run::
+
+    PYTHONPATH=src python -m repro.launch.server --arch llama3.2-3b \\
+        --q 4 --g 128 --slots 4 --port 8777
+    # ws://127.0.0.1:8777/v1/stream — send one JSON request per socket,
+    # receive streamed token frames; GET /v1/metrics for percentiles
+
+    import asyncio
+    from repro.launch.server import ServeSession     # no aiohttp needed
+    async def demo():
+        async with ServeSession(eng, n_slots=4) as sess:
+            stream = await sess.submit_stream(Request(prompt, max_new_tokens=32))
+            async for ev in stream:                  # accepted/tokens/done
+                if ev.kind == "tokens" and boring(ev.tokens):
+                    stream.cancel("lost interest")   # slot reclaimed next chunk
+    asyncio.run(demo())
 """
 
 import jax.numpy as jnp

@@ -1,9 +1,39 @@
 """Inference engine: prefill/decode split with quantized weights (paper Fig. 13)
-plus the continuous-batching serving layer (slot-based scheduler) and
-self-speculative decoding from nested BCQ precisions (DESIGN.md §5)."""
+plus the continuous-batching serving layer (slot-based scheduler),
+self-speculative decoding from nested BCQ precisions (DESIGN.md §5), and the
+request-lifecycle robustness layer (DESIGN.md §9): per-request state machine,
+cancellation/deadlines/backpressure, NaN quarantine, fault injection."""
 
 from repro.infer.engine import Engine
-from repro.infer.scheduler import Completion, Request, Scheduler
+from repro.infer.faults import FaultPlan, InjectedFault, StepClock
+from repro.infer.lifecycle import (
+    QueueFullError,
+    RequestLifecycle,
+    RequestState,
+    TransitionError,
+    latency_summary,
+)
+from repro.infer.scheduler import (
+    Completion,
+    DispatchError,
+    Request,
+    Scheduler,
+)
 from repro.infer.speculative import SpecConfig
 
-__all__ = ["Engine", "Scheduler", "Request", "Completion", "SpecConfig"]
+__all__ = [
+    "Engine",
+    "Scheduler",
+    "Request",
+    "Completion",
+    "SpecConfig",
+    "RequestState",
+    "RequestLifecycle",
+    "QueueFullError",
+    "TransitionError",
+    "DispatchError",
+    "FaultPlan",
+    "InjectedFault",
+    "StepClock",
+    "latency_summary",
+]

@@ -56,6 +56,31 @@ class GenerationResult:
     prompt_len: int
     steps: int
     spec_stats: Optional[dict] = None  # accept_rate/chunks when speculating
+    # per-row index into the generated tokens of the first stop token
+    # (-1 = none); set when generate(stop_tokens=...) was given
+    stop_positions: Optional[np.ndarray] = None
+
+    def generated(self, b: int = 0) -> np.ndarray:
+        """Row ``b``'s generation, truncated at its stop token (inclusive).
+
+        ``tokens`` stays rectangular — decode always runs the full budget and
+        truncation is host-side — so this is the accessor that honours
+        ``stop_tokens``: everything after the first stop token is cut, and
+        the stop token itself is the last element (matching the scheduler's
+        early-exit serving contract)."""
+        new = self.tokens[b, self.prompt_len :]
+        if self.stop_positions is not None and self.stop_positions[b] >= 0:
+            return new[: int(self.stop_positions[b]) + 1]
+        return new
+
+
+def stop_positions_for(new_tokens: np.ndarray, stop_tokens) -> np.ndarray:
+    """(B, N) generated tokens -> (B,) index of each row's first stop token
+    (-1 if the row never emits one)."""
+    new_tokens = np.asarray(new_tokens)
+    hits = np.isin(new_tokens, np.asarray(list(stop_tokens), np.int32))
+    first = np.argmax(hits, axis=1)
+    return np.where(hits.any(axis=1), first, -1).astype(np.int32)
 
 
 def _sample(logits: jax.Array, key: jax.Array, temperature, greedy: bool) -> jax.Array:
@@ -395,6 +420,23 @@ class Engine:
         self._scan_decode_slots = jax.jit(
             _scan_decode_slots, static_argnames=("n_steps",), donate_argnums=(1,)
         )
+        def _release(slots, slot):
+            """Deactivate one slot row: the lifecycle layer's slot-reclaim
+            primitive (cancel / timeout / quarantine). Only the row's active
+            mask and budget change — its cache rows are left as-is, which is
+            safe by the write-before-read contract (DESIGN.md §4: garbage
+            beyond a row's position is never attended) and admission
+            overwrites the entire row anyway."""
+            return dict(
+                slots,
+                active=slots["active"].at[slot].set(False),
+                remaining=slots["remaining"].at[slot].set(0),
+            )
+
+        self._release = jax.jit(_release, donate_argnums=(0,))
+        # row-finiteness of the carried logits: the scheduler's NaN/inf guard
+        # reads (B,) bools per chunk instead of hauling (B, vocab) to host
+        self._finite_rows = jax.jit(lambda lg: jnp.isfinite(lg).all(axis=-1))
         self._admit_spec = jax.jit(_admit_spec, donate_argnums=(0,))
         self._scan_spec_slots = jax.jit(
             _scan_spec_slots, static_argnames=("n_chunks", "gamma"),
@@ -606,6 +648,27 @@ class Engine:
             n_chunks=n_chunks, gamma=spec.gamma,
         )
 
+    def release_slot(self, slots: dict, slot: int) -> dict:
+        """Reclaim one slot at a chunk boundary (cancel/timeout/quarantine):
+        the row goes inactive with zero budget and stops emitting; neighbours
+        are untouched (per-row masks) and the next admission overwrites the
+        row's whole state. Zero trace on surviving rows — asserted by
+        tests/test_lifecycle.py's survivor-invariance suite."""
+        return self._release(slots, jnp.int32(slot))
+
+    def finite_logit_rows(self, slots: dict) -> np.ndarray:
+        """(B,) host bools: row b's carried next-token logits are all finite.
+        The scheduler's NaN/inf guard polls this at chunk boundaries and
+        quarantines exactly the poisoned rows."""
+        return np.asarray(self._finite_rows(slots["logits"]))
+
+    def poison_logit_row(self, slots: dict, slot: int) -> dict:
+        """Fault-injection hook (infer/faults.py): overwrite one row's
+        carried logits with NaN, exactly what an upstream numerical fault
+        would leave behind. Host-side, between dispatches — never inside a
+        jitted computation."""
+        return dict(slots, logits=slots["logits"].at[slot].set(jnp.nan))
+
     def generate(
         self,
         prompt_tokens: np.ndarray,
@@ -616,6 +679,7 @@ class Engine:
         seed: int = 0,
         scan: bool = True,
         speculate: Optional[SpecConfig] = None,
+        stop_tokens=None,
     ) -> GenerationResult:
         """Greedy (temperature=0) or sampled autoregressive generation.
 
@@ -636,15 +700,49 @@ class Engine:
         greedy decode; ``temperature>0`` output follows the exact target
         distribution via rejection sampling (a *different* stream than the
         plain path's for the same seed — per-row PRNG streams). The result's
-        ``spec_stats`` reports the draft acceptance rate."""
+        ``spec_stats`` reports the draft acceptance rate.
+
+        ``stop_tokens`` (iterable of token ids) marks per-row early stops:
+        decode still runs the full ``n_steps`` budget (the scan length is
+        static), but the result records each row's first stop position and
+        ``GenerationResult.generated(b)`` returns the truncated completion —
+        token-identical, up to the stop, to the untruncated run. The
+        *serving* path (``Scheduler``) additionally frees the slot at the
+        next chunk boundary, which is where the early exit buys throughput."""
         cfg = self.cfg
         b, s = prompt_tokens.shape[:2]
+        if s + n_steps > self.max_seq:
+            # the KV cache has exactly max_seq rows per slot; decoding past
+            # them would wrap/garble device-side state with no error raised
+            raise ValueError(
+                f"prompt_len({s}) + n_steps({n_steps}) exceeds the engine's "
+                f"cache length max_seq={self.max_seq} — decode past the cache "
+                f"produces device-side garbage (build the Engine with a "
+                f"larger max_seq or shorten the request)"
+            )
+        if cfg.input_kind == "tokens":
+            pt = np.asarray(prompt_tokens)
+            if pt.size and (pt.min() < 0 or pt.max() >= cfg.vocab):
+                raise ValueError(
+                    f"prompt token ids must lie in [0, vocab={cfg.vocab}); got "
+                    f"range [{pt.min()}, {pt.max()}] — out-of-range ids index "
+                    f"garbage embedding rows device-side"
+                )
         cache = self._make_cache(b)
         logits, cache = self._prefill(
             self.params, jnp.asarray(prompt_tokens), image_emb, cache
         )
         key = jax.random.PRNGKey(seed)
         greedy = temperature <= 0
+
+        def _result(tokens: np.ndarray, **kw) -> GenerationResult:
+            sp = None
+            if stop_tokens:
+                sp = stop_positions_for(tokens[:, s:], stop_tokens)
+            return GenerationResult(
+                tokens=tokens, prompt_len=s, steps=n_steps,
+                stop_positions=sp, **kw,
+            )
 
         if speculate is not None:
             self._validate_spec(speculate)
@@ -669,8 +767,8 @@ class Engine:
                 [np.asarray(prompt_tokens), np.asarray(toks)], axis=1
             )
             acc, prop, chunks = int(acc), int(prop), int(chunks)
-            return GenerationResult(
-                tokens=tokens, prompt_len=s, steps=n_steps,
+            return _result(
+                tokens,
                 spec_stats={
                     "accept_rate": acc / max(prop, 1),
                     "accepted": acc,
@@ -693,7 +791,7 @@ class Engine:
                 greedy=greedy,
             )
             tokens = np.concatenate([np.asarray(prompt_tokens), np.asarray(toks)], axis=1)
-            return GenerationResult(tokens=tokens, prompt_len=s, steps=n_steps)
+            return _result(tokens)
 
         out = [np.asarray(prompt_tokens)] if cfg.input_kind == "tokens" else []
         for step in range(n_steps):
@@ -714,4 +812,11 @@ class Engine:
                 self.params, tok, cache, jnp.int32(s + step)
             )
         tokens = np.concatenate(out, axis=1)
-        return GenerationResult(tokens=tokens, prompt_len=s, steps=n_steps)
+        if cfg.input_kind != "tokens":
+            if stop_tokens:
+                raise ValueError(
+                    "stop_tokens is only supported for tokens-input models "
+                    "(modality-stub outputs are code streams, not vocab ids)"
+                )
+            return GenerationResult(tokens=tokens, prompt_len=s, steps=n_steps)
+        return _result(tokens)

@@ -1,0 +1,181 @@
+"""Request-lifecycle state machine for the serving stack (DESIGN.md §9).
+
+The scheduler's correctness contract (DESIGN.md §4) covers the happy path —
+every request runs its full budget and the interleaving is invisible. Real
+traffic is not the happy path: clients cancel and disconnect, deadlines
+expire, queues flood, and a single poisoned row must not take the batch down.
+This module gives every request an explicit, *validated* state machine::
+
+    QUEUED ──► PREFILLING ──► DECODING ──► FINISHED
+      │   │         │             ├──► CANCELLED    (client cancel/disconnect)
+      │   │         │             ├──► TIMED_OUT    (TTFT or wall-clock deadline)
+      │   │         └──► FAILED   └──► FAILED       (dispatch/NaN quarantine)
+      │   └──► CANCELLED   (cancelled while queued)
+      └──► SHED            (deadline-aware queue shedding)
+
+plus a :class:`QueueFullError` raised at submit time when the bounded
+admission queue is full (backpressure is a *loud reject with a reason*, never
+unbounded growth). Terminal states are terminal — a second transition out of
+them is a scheduler bug and raises :class:`TransitionError` immediately
+rather than corrupting accounting.
+
+Every record carries the timestamps the serving metrics need (submit, admit,
+first token, finish, measured against the scheduler's injectable clock), so
+TTFT/TPOT percentiles (:func:`latency_summary`) fall out of the same
+bookkeeping that drives the state machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+    SHED = "shed"
+
+    @property
+    def terminal(self) -> bool:
+        return self in _TERMINAL
+
+
+_TERMINAL = {
+    RequestState.FINISHED,
+    RequestState.CANCELLED,
+    RequestState.TIMED_OUT,
+    RequestState.FAILED,
+    RequestState.SHED,
+}
+
+# Allowed transitions. PREFILLING -> CANCELLED/TIMED_OUT is intentionally
+# absent: admission (batch-1 prefill + install) is one synchronous host call,
+# so cancellation/deadline checks happen at the chunk boundaries on either
+# side of it, never inside it.
+_ALLOWED: Dict[RequestState, set] = {
+    RequestState.QUEUED: {
+        RequestState.PREFILLING,
+        RequestState.CANCELLED,
+        RequestState.SHED,
+    },
+    RequestState.PREFILLING: {RequestState.DECODING, RequestState.FAILED},
+    RequestState.DECODING: {
+        RequestState.FINISHED,
+        RequestState.CANCELLED,
+        RequestState.TIMED_OUT,
+        RequestState.FAILED,
+    },
+}
+
+
+class TransitionError(RuntimeError):
+    """An illegal lifecycle transition — always a scheduler bug, never data."""
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue is at capacity; the request was NOT enqueued.
+
+    Raised by ``Scheduler.submit`` (and surfaced as a rejection event by the
+    async server) so backpressure is visible to the caller instead of
+    manifesting as unbounded queue growth.
+    """
+
+
+@dataclasses.dataclass
+class RequestLifecycle:
+    """Per-request lifecycle record: validated state + latency timestamps.
+
+    ``new_tokens`` is populated at every terminal transition with whatever
+    the request emitted — the full completion for FINISHED, the partial
+    prefix for CANCELLED/TIMED_OUT/FAILED (a failed request's partial tokens
+    are still useful for debugging the failure), empty for SHED.
+    """
+
+    rid: int
+    state: RequestState = RequestState.QUEUED
+    reason: str = ""
+    submitted_at: float = 0.0
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    n_tokens: int = 0
+    new_tokens: Optional[np.ndarray] = None
+    history: List[Tuple[RequestState, float]] = dataclasses.field(
+        default_factory=list
+    )
+
+    def transition(self, new: RequestState, at: float, reason: str = "") -> None:
+        allowed = _ALLOWED.get(self.state, set())
+        if new not in allowed:
+            raise TransitionError(
+                f"request {self.rid}: illegal transition "
+                f"{self.state.value} -> {new.value}"
+                + (f" (from terminal state)" if self.state.terminal else "")
+            )
+        self.state = new
+        self.history.append((new, at))
+        if reason:
+            self.reason = reason
+        if new is RequestState.PREFILLING:
+            self.admitted_at = at
+        if new.terminal:
+            self.finished_at = at
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit -> first emitted token (chunk-boundary resolution)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first."""
+        if self.first_token_at is None or self.finished_at is None:
+            return None
+        if self.n_tokens < 2:
+            return None
+        return (self.finished_at - self.first_token_at) / (self.n_tokens - 1)
+
+
+def _pcts(values: List[float]) -> Optional[Dict[str, float]]:
+    if not values:
+        return None
+    v = np.asarray(values, np.float64)
+    return {
+        "p50": float(np.percentile(v, 50)),
+        "p95": float(np.percentile(v, 95)),
+        "p99": float(np.percentile(v, 99)),
+        "mean": float(v.mean()),
+        "n": len(values),
+    }
+
+
+def latency_summary(records: Iterable[RequestLifecycle]) -> dict:
+    """TTFT/TPOT p50/p95/p99 over finished requests + terminal-state counts.
+
+    TTFT/TPOT are measured at chunk-boundary resolution (tokens become
+    visible to the host when a decode chunk returns), so ``chunk=1`` gives
+    exact per-token latencies and larger chunks overstate TTFT by at most
+    one chunk's wall time — the same resolution a streaming client observes.
+    """
+    records = list(records)
+    by_state: Dict[str, int] = {}
+    for r in records:
+        by_state[r.state.value] = by_state.get(r.state.value, 0) + 1
+    fin = [r for r in records if r.state is RequestState.FINISHED]
+    return {
+        "requests": len(records),
+        "by_state": by_state,
+        "ttft_s": _pcts([r.ttft for r in fin if r.ttft is not None]),
+        "tpot_s": _pcts([r.tpot for r in fin if r.tpot is not None]),
+    }

@@ -7,7 +7,7 @@ fixed batch in lockstep — every request waits for the longest one, and the
 batch drains as requests finish. This module keeps a fixed-width decode batch
 full instead (Orca-style continuous batching):
 
-- requests wait in an **admission queue**;
+- requests wait in a **bounded admission queue**;
 - the decode batch has ``n_slots`` **slots**; a free slot is filled by
   prefilling the next queued request (batch-1) and scatter-installing its KV
   rows, position counter, PRNG key and sampling params into the slot
@@ -26,11 +26,37 @@ per-row compute is bitwise equal to the batch-1 compute. MoE families are the
 documented exception: expert-capacity dropping couples batch rows, so
 continuous batching there is throughput-correct but not token-identical.
 
-Admission happens at chunk boundaries only: ``chunk=1`` gives per-token
-admission (lowest queue latency), larger chunks amortise dispatch overhead
-across more decode steps (highest host throughput). Completion detection is
-host-side (the per-request budget is known), deactivation is device-side (the
-active mask inside the scan), so a mid-chunk finish never emits extra tokens.
+**Request lifecycle** (DESIGN.md §9, ``infer/lifecycle.py``): every request
+runs an explicit validated state machine — QUEUED → PREFILLING → DECODING →
+{FINISHED, CANCELLED, TIMED_OUT, FAILED}, with SHED for deadline-aware queue
+shedding and a loud :class:`~repro.infer.lifecycle.QueueFullError` when the
+bounded admission queue rejects a submit. The hardening invariant
+(tests/test_lifecycle.py) extends the §4 contract to the unhappy path:
+**whatever happens to any subset of requests — cancellation, deadline
+expiry, injected dispatch failures, NaN-poisoned rows — every surviving
+request's tokens stay bit-identical to an undisturbed run.** The mechanisms:
+
+- **cancellation** (:meth:`Scheduler.cancel`, thread-safe to *flag*): the
+  slot is reclaimed at the next chunk boundary (``Engine.release_slot`` — the
+  row goes inactive, the next admission overwrites its whole state row);
+- **deadlines**: per-request TTFT and total wall-clock deadlines enforced at
+  chunk boundaries against the scheduler's injectable ``clock``; queued
+  requests whose deadline already expired are SHED before wasting a prefill;
+- **NaN/inf logit guard**: a per-chunk (B,)-bool device check; a non-finite
+  row is FAILED and quarantined (slot scrubbed + refilled) while neighbours
+  decode on untouched;
+- **bounded retry with backoff** around every engine dispatch; a prefill
+  failure quarantines only the admitting request, exhausted decode-chunk
+  retries fail the *active* tenants and rebuild the slot state so queued
+  requests still complete;
+- **fault injection** (``infer/faults.py``): all of the above is
+  deterministically testable by threading a :class:`FaultPlan` through the
+  dispatch points.
+
+**Stop tokens**: per-request ``Request.stop_tokens`` finish a row early —
+host-side truncation at the chunk boundary (the stop token is the last one
+kept), the slot frees immediately, and the completion is token-identical to
+a solo ``generate`` truncated at the same position.
 
 **Tensor-parallel serving** (``Scheduler(Engine(cfg, params, mesh=...))``,
 DESIGN.md §7): the scheduler is sharding-agnostic — slots, admission and
@@ -56,13 +82,25 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.infer.engine import Engine
+from repro.infer.faults import FaultPlan
+from repro.infer.lifecycle import (
+    QueueFullError,
+    RequestLifecycle,
+    RequestState,
+    latency_summary,
+)
 from repro.infer.speculative import SpecConfig
+
+
+class DispatchError(RuntimeError):
+    """An engine dispatch kept failing after bounded retries."""
 
 
 @dataclasses.dataclass
@@ -70,17 +108,34 @@ class Request:
     """One generation request. `seed`/`temperature` are per-request: mixed
     greedy and sampled requests share a batch. ``speculate`` opts this request
     in/out of speculative decoding when the scheduler runs a speculative slot
-    batch (None → the scheduler's default: in); it is ignored otherwise."""
+    batch (None → the scheduler's default: in); it is ignored otherwise.
+
+    ``stop_tokens`` ends the generation early at the first matching token
+    (kept, then the slot frees at the next chunk boundary).
+    ``ttft_deadline_s`` / ``deadline_s`` are wall-clock budgets measured from
+    submit: miss the first-token deadline or the total deadline and the
+    request is TIMED_OUT (or SHED while still queued) at the next chunk
+    boundary instead of occupying a slot forever."""
 
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
     temperature: float = 0.0
     seed: int = 0
     speculate: Optional[bool] = None
+    stop_tokens: Optional[Sequence[int]] = None
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
     rid: Optional[int] = None  # assigned at submit() if None
 
     def __post_init__(self):
-        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        arr = np.asarray(self.prompt)
+        if arr.dtype.kind not in "iu":
+            # silent float->int32 casting would truncate values the caller
+            # never meant as token ids
+            raise ValueError(
+                f"prompt must be integer token ids, got dtype {arr.dtype}"
+            )
+        self.prompt = arr.astype(np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
@@ -98,15 +153,45 @@ class Request:
                 f"temperature must be >= 0 (0 = greedy), got {self.temperature!r}"
             )
         self.temperature = float(self.temperature)
+        # seed feeds jax.random.PRNGKey, whose C-long conversion overflows
+        # outside int64 — catch it here with the limit named instead of
+        # letting an OverflowError surface mid-admission (and reject
+        # non-integral seeds before they'd be silently truncated)
+        if isinstance(self.seed, bool) or not isinstance(
+            self.seed, (int, np.integer)
+        ):
+            raise ValueError(f"seed must be an integer, got {self.seed!r}")
+        if not (-(2**63) <= int(self.seed) < 2**63):
+            raise ValueError(
+                f"seed must fit in int64 (PRNGKey range "
+                f"[-2**63, 2**63)), got {self.seed}"
+            )
+        self.seed = int(self.seed)
+        if self.stop_tokens is not None:
+            toks = tuple(int(t) for t in self.stop_tokens)
+            if any(
+                isinstance(t, bool) or not isinstance(t, (int, np.integer))
+                for t in self.stop_tokens
+            ):
+                raise ValueError(
+                    f"stop_tokens must be integer token ids, got "
+                    f"{self.stop_tokens!r}"
+                )
+            self.stop_tokens = toks
+        for name in ("ttft_deadline_s", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and not (np.isfinite(v) and v > 0):
+                raise ValueError(f"{name} must be a positive number, got {v!r}")
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
     prompt: np.ndarray  # (prompt_len,)
-    new_tokens: np.ndarray  # (max_new_tokens,)
+    new_tokens: np.ndarray  # (<= max_new_tokens,) — shorter iff stopped early
     admitted_at_step: int  # scheduler decode-step counter at admission
     finished_at_step: int
+    stopped: bool = False  # True iff ended on a stop token before the budget
 
     @property
     def tokens(self) -> np.ndarray:
@@ -115,12 +200,13 @@ class Completion:
 
 
 class _Tenant:
-    __slots__ = ("req", "emitted", "admitted_at_step")
+    __slots__ = ("req", "emitted", "admitted_at_step", "stop")
 
     def __init__(self, req: Request, admitted_at_step: int):
         self.req = req
         self.emitted: List[int] = []
         self.admitted_at_step = admitted_at_step
+        self.stop = frozenset(req.stop_tokens or ())
 
 
 class Scheduler:
@@ -129,6 +215,30 @@ class Scheduler:
     >>> sched = Scheduler(engine, n_slots=4)
     >>> sched.submit(Request(prompt, max_new_tokens=16))
     >>> done = sched.run()   # or: sched.step() in a serving loop
+
+    Lifecycle/robustness knobs (all have serving-sane defaults):
+
+    - ``max_queue`` bounds the admission queue; a full queue rejects at
+      ``submit`` with :class:`QueueFullError` (None = unbounded, for trusted
+      batch drivers only).
+    - ``retries``/``backoff_s``: bounded exponential-backoff retry around
+      every engine dispatch.
+    - ``nan_guard``: per-chunk non-finite-logit check; poisoned rows are
+      FAILED and their slot scrubbed, neighbours untouched.
+    - ``faults``: a :class:`FaultPlan` threaded through the dispatch points
+      (deterministic fault injection; None in production).
+    - ``clock``/``sleep``: injectable time sources — deadlines and backoff
+      are wall-clock quantities, tests drive them with ``faults.StepClock``.
+    - ``on_tokens(rid, tokens)``: streaming callback, fired at every chunk
+      boundary with the request's newly visible (post-truncation) tokens.
+    - ``on_event(record)``: fired at every terminal transition with the
+      request's :class:`RequestLifecycle` (partial tokens attached).
+
+    Threading: the scheduler itself is single-threaded — drive ``submit``/
+    ``step``/``run`` from one thread (the async server pumps it from a
+    dedicated thread). :meth:`cancel` only *flags*; the flag is applied at
+    the next chunk boundary, which makes it safe to call from notification
+    contexts as long as submits/steps stay on the pump thread.
     """
 
     def __init__(
@@ -137,21 +247,58 @@ class Scheduler:
         n_slots: int = 4,
         chunk: int = 8,
         speculate: Optional[SpecConfig] = None,
+        *,
+        max_queue: Optional[int] = 64,
+        retries: int = 2,
+        backoff_s: float = 0.05,
+        nan_guard: bool = True,
+        faults: Optional[FaultPlan] = None,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+        on_tokens: Optional[Callable[[int, List[int]], None]] = None,
+        on_event: Optional[Callable[[RequestLifecycle], None]] = None,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+        if retries < 0:
+            raise ValueError("retries must be >= 0")
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
         self.speculate = speculate
+        self.max_queue = max_queue
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.nan_guard = nan_guard
+        self.faults = faults
+        self.on_tokens = on_tokens
+        self.on_event = on_event
+        self._clock = clock
+        self._sleep = sleep
         self.slots = engine.init_slots(n_slots, speculate=speculate)
         self.queue: Deque[Request] = deque()
         self._tenants: List[Optional[_Tenant]] = [None] * n_slots
+        self.outcomes: Dict[int, RequestLifecycle] = {}
+        self._pending_cancel: Dict[int, str] = {}
         self.decode_steps = 0  # total chunked decode steps executed
         self.steps_active = 0  # sum over steps of active slots (utilisation)
         self.chunk_rows = 0  # spec mode: row-chunks dispatched (accept-rate est.)
+        self.counters: Dict[str, int] = {
+            "rejected_queue_full": 0,
+            "shed": 0,
+            "cancelled": 0,
+            "timed_out": 0,
+            "failed": 0,
+            "nan_quarantined": 0,
+            "retries": 0,
+            "decode_dispatch_failures": 0,
+            "stopped_early": 0,
+        }
+        self._chunk_ordinal = 0  # decode dispatches over the lifetime
         self._rid_counter = itertools.count()
         self._used_rids = set()  # rids ever seen by THIS scheduler
 
@@ -166,6 +313,23 @@ class Scheduler:
                 f"rows (incl. {headroom} speculation headroom), engine "
                 f"max_seq={self.engine.max_seq}"
             )
+        vocab = self.engine.cfg.vocab
+        if req.prompt.min() < 0 or req.prompt.max() >= vocab:
+            raise ValueError(
+                f"prompt token ids must lie in [0, vocab={vocab}); got range "
+                f"[{req.prompt.min()}, {req.prompt.max()}] — out-of-range ids "
+                f"index garbage embedding rows device-side"
+            )
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # loud reject-with-reason backpressure: the caller (or the async
+            # server, which turns this into a per-client rejection) decides
+            # whether to retry — the queue never grows without bound
+            self.counters["rejected_queue_full"] += 1
+            raise QueueFullError(
+                f"admission queue full ({self.max_queue} waiting): request "
+                f"rejected — resubmit later, shrink the burst, or raise "
+                f"max_queue"
+            )
         if req.rid is None:
             # skip values a caller-supplied rid already claimed: rids must be
             # unique per scheduler or `{c.rid: c for c in run()}` drops results
@@ -179,8 +343,22 @@ class Scheduler:
                 "Request or an explicit unique rid)"
             )
         self._used_rids.add(req.rid)
+        self.outcomes[req.rid] = RequestLifecycle(
+            rid=req.rid, submitted_at=self._clock()
+        )
         self.queue.append(req)
         return req.rid
+
+    def cancel(self, rid: int, reason: str = "cancelled by client") -> bool:
+        """Flag a request for cancellation; applied at the next chunk
+        boundary (queued → removed before prefill, decoding → slot reclaimed
+        with zero trace on surviving rows). Returns False if the rid is
+        unknown or already terminal."""
+        rec = self.outcomes.get(rid)
+        if rec is None or rec.state.terminal:
+            return False
+        self._pending_cancel[rid] = reason
+        return True
 
     @property
     def n_active(self) -> int:
@@ -200,33 +378,233 @@ class Scheduler:
         tokens_per_row_chunk = self.steps_active / self.chunk_rows
         return max(0.0, (tokens_per_row_chunk - 1.0) / self.speculate.gamma)
 
+    def summary(self) -> dict:
+        """Lifecycle + latency summary: TTFT/TPOT percentiles over finished
+        requests, terminal-state counts, and the robustness counters."""
+        out = latency_summary(self.outcomes.values())
+        out["counters"] = dict(self.counters)
+        out["decode_steps"] = self.decode_steps
+        return out
+
+    # -- lifecycle internals -------------------------------------------------
+
+    def _terminal(
+        self,
+        rec: RequestLifecycle,
+        state: RequestState,
+        reason: str,
+        tokens: Optional[List[int]] = None,
+    ) -> None:
+        rec.transition(state, self._clock(), reason)
+        rec.new_tokens = np.asarray(tokens or [], np.int32)
+        rec.n_tokens = int(rec.new_tokens.size)
+        if self.on_event is not None:
+            self.on_event(rec)
+
+    def _evict(self, slot: int, state: RequestState, reason: str) -> None:
+        """Reclaim a slot mid-flight (cancel/timeout/quarantine): terminal
+        transition with the partial tokens attached, then deactivate the row
+        so it stops consuming decode steps. The next admission overwrites the
+        row's entire state (slot-reset contract, DESIGN.md §4) — zero trace
+        on surviving rows."""
+        tenant = self._tenants[slot]
+        assert tenant is not None
+        self._terminal(
+            self.outcomes[tenant.req.rid], state, reason, tokens=tenant.emitted
+        )
+        self._tenants[slot] = None
+        self.slots = self.engine.release_slot(self.slots, slot)
+
+    def _apply_cancels(self) -> None:
+        if not self._pending_cancel:
+            return
+        keep: Deque[Request] = deque()
+        for req in self.queue:
+            reason = self._pending_cancel.pop(req.rid, None)
+            if reason is None:
+                keep.append(req)
+            else:
+                self.counters["cancelled"] += 1
+                self._terminal(
+                    self.outcomes[req.rid], RequestState.CANCELLED, reason
+                )
+        self.queue = keep
+        for slot, tenant in enumerate(self._tenants):
+            if tenant is None:
+                continue
+            reason = self._pending_cancel.pop(tenant.req.rid, None)
+            if reason is not None:
+                self.counters["cancelled"] += 1
+                self._evict(slot, RequestState.CANCELLED, reason)
+        self._pending_cancel.clear()  # unknown/raced rids: nothing to do
+
+    def _enforce_deadlines(self) -> None:
+        now = self._clock()
+        # queued requests whose deadline already expired are shed before they
+        # waste a prefill — deadline-aware queue shedding
+        keep: Deque[Request] = deque()
+        for req in self.queue:
+            rec = self.outcomes[req.rid]
+            waited = now - rec.submitted_at
+            expired = None
+            if req.ttft_deadline_s is not None and waited > req.ttft_deadline_s:
+                expired = (
+                    f"shed in queue: TTFT deadline {req.ttft_deadline_s}s "
+                    f"expired after {waited:.3f}s waiting"
+                )
+            elif req.deadline_s is not None and waited > req.deadline_s:
+                expired = (
+                    f"shed in queue: deadline {req.deadline_s}s expired "
+                    f"after {waited:.3f}s waiting"
+                )
+            if expired is None:
+                keep.append(req)
+            else:
+                self.counters["shed"] += 1
+                self._terminal(rec, RequestState.SHED, expired)
+        self.queue = keep
+        for slot, tenant in enumerate(self._tenants):
+            if tenant is None:
+                continue
+            req = tenant.req
+            rec = self.outcomes[req.rid]
+            age = now - rec.submitted_at
+            if req.deadline_s is not None and age > req.deadline_s:
+                self.counters["timed_out"] += 1
+                self._evict(
+                    slot,
+                    RequestState.TIMED_OUT,
+                    f"deadline {req.deadline_s}s exceeded after "
+                    f"{len(tenant.emitted)} tokens",
+                )
+            elif (
+                req.ttft_deadline_s is not None
+                and rec.first_token_at is None
+                and age > req.ttft_deadline_s
+            ):
+                self.counters["timed_out"] += 1
+                self._evict(
+                    slot,
+                    RequestState.TIMED_OUT,
+                    f"TTFT deadline {req.ttft_deadline_s}s exceeded before "
+                    f"first token",
+                )
+
+    def _with_retry(self, fn, what: str):
+        """Bounded exponential-backoff retry around one engine dispatch.
+
+        Sound for failures raised *before* the dispatch consumes its (donated)
+        inputs — which is where FaultPlan injects and where argument/shape
+        validation fails. A failure that killed the donated slot state anyway
+        is caught one level up: exhausted decode retries rebuild the slot
+        state from scratch."""
+        delay = self.backoff_s
+        last: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            try:
+                return fn()
+            except Exception as e:  # noqa: BLE001 — retry then re-raise below
+                last = e
+                if attempt < self.retries:
+                    self.counters["retries"] += 1
+                    self._sleep(delay)
+                    delay *= 2
+        raise DispatchError(
+            f"{what} failed after {self.retries + 1} attempt(s): {last!r}"
+        ) from last
+
     # -- scheduling ----------------------------------------------------------
+
+    def _record_tokens(self, tenant: _Tenant, new: List[int]) -> bool:
+        """Append a chunk's newly emitted tokens to the tenant, honouring its
+        stop set (truncation keeps the stop token). Fires the streaming
+        callback with exactly the visible tokens. Returns True if a stop
+        token ended the request."""
+        rec = self.outcomes[tenant.req.rid]
+        stopped = False
+        if tenant.stop:
+            for i, t in enumerate(new):
+                if t in tenant.stop:
+                    new = new[: i + 1]
+                    stopped = True
+                    break
+        if new:
+            if rec.first_token_at is None:
+                rec.first_token_at = self._clock()
+            tenant.emitted.extend(new)
+            rec.n_tokens = len(tenant.emitted)
+            if self.on_tokens is not None:
+                self.on_tokens(tenant.req.rid, list(new))
+        return stopped
+
+    def _finish(self, slot: int, *, stopped: bool) -> Completion:
+        """FINISH a tenant: budget exhausted or stop token hit. Early stops
+        release the slot (the device row is still active); budget exhaustion
+        already deactivated the row on device."""
+        tenant = self._tenants[slot]
+        assert tenant is not None
+        if stopped:
+            self.counters["stopped_early"] += 1
+            self.slots = self.engine.release_slot(self.slots, slot)
+        self._terminal(
+            self.outcomes[tenant.req.rid],
+            RequestState.FINISHED,
+            "stop token" if stopped else "budget exhausted",
+            tokens=tenant.emitted,
+        )
+        self._tenants[slot] = None  # freed; refilled next chunk boundary
+        return Completion(
+            rid=tenant.req.rid,
+            prompt=tenant.req.prompt,
+            new_tokens=np.asarray(tenant.emitted, np.int32),
+            admitted_at_step=tenant.admitted_at_step,
+            finished_at_step=self.decode_steps,
+            stopped=stopped,
+        )
 
     def _admit_free_slots(self) -> List[Completion]:
         """Fill free slots from the queue. In speculative mode admission also
         emits the request's first token (sampled from its own prefill logits
         on device), so a budget-1 request can complete right here — returned
-        so its slot frees up for the same admission round."""
+        so its slot frees up for the same admission round. A prefill dispatch
+        that keeps failing quarantines only the admitting request; the slot
+        stays free for the next queued request in the same round."""
         done: List[Completion] = []
         for slot in range(self.n_slots):
             while self.queue and self._tenants[slot] is None:
                 req = self.queue.popleft()
-                self.slots = self.engine.admit_slot(
-                    self.slots,
-                    slot,
-                    req.prompt,
-                    max_new_tokens=req.max_new_tokens,
-                    temperature=req.temperature,
-                    seed=req.seed,
-                    speculate=req.speculate is not False,
-                )
+                rec = self.outcomes[req.rid]
+                rec.transition(RequestState.PREFILLING, self._clock())
+
+                def dispatch(req=req, slot=slot):
+                    if self.faults is not None:
+                        self.faults.on_prefill(req.rid)
+                    return self.engine.admit_slot(
+                        self.slots,
+                        slot,
+                        req.prompt,
+                        max_new_tokens=req.max_new_tokens,
+                        temperature=req.temperature,
+                        seed=req.seed,
+                        speculate=req.speculate is not False,
+                    )
+
+                try:
+                    self.slots = self._with_retry(
+                        dispatch, what=f"admission prefill (request {req.rid})"
+                    )
+                except DispatchError as e:
+                    self.counters["failed"] += 1
+                    self._terminal(rec, RequestState.FAILED, str(e))
+                    continue  # slot still free: try the next queued request
+                rec.transition(RequestState.DECODING, self._clock())
                 tenant = _Tenant(req, self.decode_steps)
                 self._tenants[slot] = tenant
                 if self.speculate is not None:
-                    tenant.emitted.append(int(np.asarray(self.slots["t_pend"][slot])))
-                    c = self._harvest(slot)
-                    if c is not None:
-                        done.append(c)  # budget-1: finished at admission
+                    t0 = int(np.asarray(self.slots["t_pend"][slot]))
+                    stopped = self._record_tokens(tenant, [t0])
+                    if stopped or len(tenant.emitted) >= req.max_new_tokens:
+                        done.append(self._finish(slot, stopped=stopped))
         return done
 
     def _harvest(self, slot: int) -> Optional[Completion]:
@@ -236,28 +614,88 @@ class Scheduler:
         assert len(tenant.emitted) == tenant.req.max_new_tokens, (
             "device active-mask emitted past the request budget"
         )
-        self._tenants[slot] = None  # freed; refilled next chunk boundary
-        return Completion(
-            rid=tenant.req.rid,
-            prompt=tenant.req.prompt,
-            new_tokens=np.asarray(tenant.emitted, np.int32),
-            admitted_at_step=tenant.admitted_at_step,
-            finished_at_step=self.decode_steps,
-        )
+        return self._finish(slot, stopped=False)
+
+    def _dispatch_decode(self):
+        """One decode (or speculative) chunk with fault injection + bounded
+        retry. Returns the (tokens, valid, slots) triple, or None after
+        exhausted retries — in which case every *active* tenant is FAILED
+        (they are the affected requests; their device state may be
+        unrecoverable) and the slot state is rebuilt so queued requests still
+        serve."""
+        ordinal = self._chunk_ordinal
+        self._chunk_ordinal += 1
+
+        def dispatch():
+            if self.faults is not None:
+                self.faults.on_chunk(ordinal)
+            if self.speculate is None:
+                return self.engine.decode_slots(self.slots, self.chunk)
+            return self.engine.spec_decode_slots(self.slots, self.chunk)
+
+        try:
+            return self._with_retry(dispatch, what=f"decode chunk {ordinal}")
+        except DispatchError as e:
+            self.counters["decode_dispatch_failures"] += 1
+            for slot, tenant in enumerate(self._tenants):
+                if tenant is None:
+                    continue
+                self.counters["failed"] += 1
+                tenant_rec = self.outcomes[tenant.req.rid]
+                self._terminal(
+                    tenant_rec, RequestState.FAILED, str(e), tokens=tenant.emitted
+                )
+                self._tenants[slot] = None
+            # the failed dispatch may have consumed (donated) the old slot
+            # buffers — rebuild from scratch rather than risk dead buffers
+            self.slots = self.engine.init_slots(
+                self.n_slots, speculate=self.speculate
+            )
+            return None
+
+    def _inject_and_guard_nan(self) -> None:
+        """Post-chunk NaN handling: (a) FaultPlan poisons due rows (exactly
+        what an upstream numerical fault leaves behind); (b) the guard fails
+        and quarantines every non-finite row — slot scrubbed and refilled at
+        the next boundary, neighbours untouched."""
+        if self.faults is not None:
+            for slot, tenant in enumerate(self._tenants):
+                if tenant is not None and self.faults.poison_due(
+                    tenant.req.rid, len(tenant.emitted)
+                ):
+                    self.slots = self.engine.poison_logit_row(self.slots, slot)
+        if not self.nan_guard:
+            return
+        occupied = [s for s, t in enumerate(self._tenants) if t is not None]
+        if not occupied:
+            return
+        finite = self.engine.finite_logit_rows(self.slots)
+        for slot in occupied:
+            if not finite[slot]:
+                self.counters["nan_quarantined"] += 1
+                self.counters["failed"] += 1
+                self._evict(
+                    slot,
+                    RequestState.FAILED,
+                    "non-finite logits: row quarantined (slot scrubbed; "
+                    "neighbours unaffected)",
+                )
 
     def step(self) -> List[Completion]:
-        """Admit into free slots, run one decode chunk, harvest completions."""
-        done = self._admit_free_slots()
+        """One chunk boundary: apply cancels, enforce deadlines, admit into
+        free slots, run one decode chunk, harvest completions, guard NaNs."""
+        done: List[Completion] = []
+        self._apply_cancels()
+        self._enforce_deadlines()
+        done.extend(self._admit_free_slots())
         if self.n_active == 0:
             return done
-        if self.speculate is None:
-            toks, valid, self.slots = self.engine.decode_slots(self.slots, self.chunk)
-            self.decode_steps += self.chunk
-        else:
-            toks, valid, self.slots = self.engine.spec_decode_slots(
-                self.slots, self.chunk
-            )
-            self.decode_steps += self.chunk
+        res = self._dispatch_decode()
+        if res is None:
+            return done
+        toks, valid, self.slots = res
+        self.decode_steps += self.chunk
+        if self.speculate is not None:
             self.chunk_rows += self.n_active * self.chunk
         toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))
         valid = np.asarray(valid)
@@ -266,14 +704,23 @@ class Scheduler:
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:
                 continue
-            tenant.emitted.extend(int(t) for t in toks[slot][valid[slot]])
-            c = self._harvest(slot)
-            if c is not None:
-                done.append(c)
+            stopped = self._record_tokens(
+                tenant, [int(t) for t in toks[slot][valid[slot]]]
+            )
+            if stopped:
+                done.append(self._finish(slot, stopped=True))
+            else:
+                c = self._harvest(slot)
+                if c is not None:
+                    done.append(c)
+        self._inject_and_guard_nan()
         return done
 
     def run(self, max_chunks: int = 100_000) -> List[Completion]:
-        """Drain the queue completely; returns completions in finish order."""
+        """Drain the queue completely; returns completions in finish order.
+        Requests that end CANCELLED/TIMED_OUT/FAILED/SHED do not produce a
+        Completion — read their terminal records from ``outcomes`` (or stream
+        them via ``on_event``)."""
         out: List[Completion] = []
         for _ in range(max_chunks):
             if self.idle:

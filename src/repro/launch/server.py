@@ -1,0 +1,507 @@
+"""Async streaming serve front end (DESIGN.md §9, ROADMAP open item 4).
+
+``launch/serve.py`` is a synchronous driver; production traffic is concurrent
+clients, streamed tokens, and tail-latency SLOs. This module serves the
+continuous-batching scheduler to real clients:
+
+- :class:`ServeSession` — the transport-agnostic core. One dedicated **pump
+  thread** owns the :class:`~repro.infer.Scheduler` (JAX dispatches block, so
+  they must stay off the event loop); the asyncio side talks to it through a
+  thread-safe inbox (submits/cancels) and per-request ``asyncio.Queue``
+  streams fed via ``loop.call_soon_threadsafe``. Tokens stream per-slot as
+  chunks complete; terminal lifecycle events (finished / cancelled /
+  timed-out / failed / shed) close the stream with a per-request status.
+- an **aiohttp WebSocket app** (:func:`make_app`) on top: one request per
+  socket, token frames as they decode, client disconnect honoured as
+  cancellation at the next chunk boundary, admission control under burst
+  load (a full queue rejects loudly instead of buffering without bound), and
+  a ``/v1/metrics`` endpoint reporting per-request TTFT/TPOT p50/p95/p99.
+  aiohttp is optional — the session core works without it (and is what the
+  differential tests drive); ``make_app`` raises if it is missing.
+
+Slow clients: each stream buffer is bounded (``max_buffer`` events). A client
+that stops reading while the scheduler keeps emitting overflows its buffer
+and is **cancelled with a reason** — one stalled consumer must not grow host
+memory or, worse, backpressure the whole decode batch. (Deterministic stalls
+are injectable via ``FaultPlan.client_stall`` for exactly this test.)
+
+Run it::
+
+    PYTHONPATH=src python -m repro.launch.server --arch llama3.2-3b \
+        --q 4 --g 128 --slots 4 --port 8777
+
+WebSocket protocol (``/v1/stream``, JSON frames)::
+
+    -> {"prompt": [...], "max_new_tokens": 16, "temperature": 0.7,
+        "seed": 1, "stop_tokens": [2], "deadline_s": 30.0}
+    <- {"type": "accepted", "rid": 0}
+    <- {"type": "tokens", "rid": 0, "tokens": [5, 17, ...]}   (per chunk)
+    <- {"type": "done", "rid": 0, "status": "finished", "n_tokens": 16}
+    or {"type": "error", "rid": 0, "status": "timed_out", "reason": "..."}
+    or {"type": "rejected", "reason": "admission queue full (...)"}
+    -> {"type": "cancel"}        (or just close the socket)
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.infer import (
+    FaultPlan,
+    QueueFullError,
+    Request,
+    RequestLifecycle,
+    RequestState,
+    Scheduler,
+)
+
+try:  # aiohttp is optional: the session core must import without it
+    from aiohttp import WSMsgType, web
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    web = None
+    WSMsgType = None
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One event on a request's stream. ``kind``: accepted | tokens | done |
+    error | rejected. Terminal kinds (done/error/rejected) end the stream."""
+
+    kind: str
+    rid: int = -1
+    tokens: Optional[List[int]] = None
+    status: str = ""
+    reason: str = ""
+    n_tokens: int = 0
+
+    @property
+    def terminal(self) -> bool:
+        return self.kind in ("done", "error", "rejected")
+
+    def to_json(self) -> dict:
+        d = {"type": self.kind, "rid": self.rid}
+        if self.tokens is not None:
+            d["tokens"] = self.tokens
+        if self.status:
+            d["status"] = self.status
+        if self.reason:
+            d["reason"] = self.reason
+        if self.kind == "done":
+            d["n_tokens"] = self.n_tokens
+        return d
+
+
+class RequestStream:
+    """Async view of one in-flight request: iterate to receive events until a
+    terminal one; ``cancel()`` flags host-side cancellation (applied at the
+    next chunk boundary)."""
+
+    def __init__(self, rid: int, queue: "asyncio.Queue[StreamEvent]",
+                 session: "ServeSession"):
+        self.rid = rid
+        self._queue = queue
+        self._session = session
+        self._done = False
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> StreamEvent:
+        if self._done:
+            raise StopAsyncIteration
+        ev = await self._queue.get()
+        if ev.terminal:
+            self._done = True
+        return ev
+
+    def cancel(self, reason: str = "cancelled by client") -> None:
+        self._session.cancel(self.rid, reason)
+
+    async def drain(self) -> Tuple[List[int], StreamEvent]:
+        """Collect the whole stream: (all tokens, terminal event)."""
+        toks: List[int] = []
+        last = StreamEvent(kind="error", rid=self.rid, reason="stream ended")
+        async for ev in self:
+            if ev.kind == "tokens" and ev.tokens:
+                toks.extend(ev.tokens)
+            last = ev
+        return toks, last
+
+
+class ServeSession:
+    """Pump a Scheduler off-thread and expose async per-request streams.
+
+    The scheduler is single-threaded by contract; every mutation (submit,
+    step, cancel application) happens on the pump thread. The asyncio side
+    only appends to a thread-safe inbox and reads from per-request queues.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        n_slots: int = 4,
+        chunk: int = 8,
+        speculate=None,
+        max_queue: Optional[int] = 64,
+        max_buffer: int = 1024,
+        nan_guard: bool = True,
+        faults: Optional[FaultPlan] = None,
+        idle_wait_s: float = 0.005,
+    ):
+        self._engine = engine
+        self._faults = faults
+        self._max_buffer = max_buffer
+        self._idle_wait_s = idle_wait_s
+        self.sched = Scheduler(
+            engine,
+            n_slots=n_slots,
+            chunk=chunk,
+            speculate=speculate,
+            max_queue=max_queue,
+            nan_guard=nan_guard,
+            faults=faults,
+            on_tokens=self._on_tokens,
+            on_event=self._on_event,
+        )
+        self._inbox: deque = deque()  # ("submit", req) | ("cancel", rid, reason)
+        self._wake = threading.Event()
+        self._stop_flag = False
+        self._thread: Optional[threading.Thread] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        # rid -> (asyncio queue, overflowed flag holder)
+        self._streams: Dict[int, "asyncio.Queue[StreamEvent]"] = {}
+        self._rids = itertools.count()
+        self.counters = {"overflow_cancelled": 0, "rejected": 0}
+
+    # -- lifecycle of the session itself -------------------------------------
+
+    async def __aenter__(self) -> "ServeSession":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    async def start(self) -> None:
+        if self._thread is not None:
+            raise RuntimeError("session already started")
+        self._loop = asyncio.get_running_loop()
+        self._thread = threading.Thread(
+            target=self._pump, name="repro-serve-pump", daemon=True
+        )
+        self._thread.start()
+
+    async def stop(self, drain: bool = False) -> None:
+        """Stop the pump. ``drain=True`` serves out everything in flight
+        first; otherwise in-flight requests are cancelled at the next chunk
+        boundary (their streams receive a terminal event either way)."""
+        if self._thread is None:
+            return
+        if drain:
+            while not self.sched.idle or self._inbox:
+                await asyncio.sleep(self._idle_wait_s)
+        self._stop_flag = True
+        self._wake.set()
+        await asyncio.get_running_loop().run_in_executor(
+            None, self._thread.join
+        )
+        self._thread = None
+
+    # -- async client API -----------------------------------------------------
+
+    async def submit_stream(self, req: Request) -> RequestStream:
+        """Submit a request; returns its stream. Admission happens on the
+        pump thread — a full queue surfaces as a terminal ``rejected`` event
+        on the stream (never an unbounded enqueue)."""
+        if self._loop is None:
+            raise RuntimeError("session not started")
+        rid = req.rid if req.rid is not None else next(self._rids)
+        req.rid = rid
+        q: "asyncio.Queue[StreamEvent]" = asyncio.Queue()
+        self._streams[rid] = q
+        self._inbox.append(("submit", req))
+        self._wake.set()
+        return RequestStream(rid, q, self)
+
+    def cancel(self, rid: int, reason: str = "cancelled by client") -> None:
+        self._inbox.append(("cancel", rid, reason))
+        self._wake.set()
+
+    def metrics(self) -> dict:
+        """Scheduler lifecycle/latency summary + server-side counters.
+        Snapshot read across threads: dict/int reads are atomic under the
+        GIL, and the records it summarises are terminal (immutable)."""
+        out = self.sched.summary()
+        out["server"] = dict(self.counters)
+        return out
+
+    # -- pump thread ----------------------------------------------------------
+
+    def _post(self, rid: int, ev: StreamEvent) -> None:
+        """Pump thread -> event loop: deliver one event to a stream, applying
+        the bounded-buffer slow-client policy."""
+        q = self._streams.get(rid)
+        if q is None or self._loop is None:
+            return
+        if ev.terminal:
+            self._streams.pop(rid, None)
+        elif q.qsize() >= self._max_buffer:
+            # slow client: its buffer is full. Cancel the request rather than
+            # grow host memory; the terminal event will still be delivered
+            # (terminal events bypass the bound — the stream is closing).
+            self.counters["overflow_cancelled"] += 1
+            self.sched.cancel(
+                rid,
+                f"slow client: stream buffer overflowed ({self._max_buffer} "
+                f"events unread)",
+            )
+            return
+        self._loop.call_soon_threadsafe(q.put_nowait, ev)
+
+    def _on_tokens(self, rid: int, tokens: List[int]) -> None:
+        if self._faults is not None:
+            stall = self._faults.stall_for(rid)
+            if stall > 0:
+                time.sleep(stall)  # injected slow consumer (pump-side stall)
+        self._post(rid, StreamEvent(kind="tokens", rid=rid, tokens=tokens))
+
+    def _on_event(self, rec: RequestLifecycle) -> None:
+        if rec.state is RequestState.FINISHED:
+            ev = StreamEvent(
+                kind="done", rid=rec.rid, status=rec.state.value,
+                reason=rec.reason, n_tokens=rec.n_tokens,
+            )
+        else:
+            ev = StreamEvent(
+                kind="error", rid=rec.rid, status=rec.state.value,
+                reason=rec.reason,
+            )
+        self._post(rec.rid, ev)
+
+    def _drain_inbox(self) -> int:
+        n = 0
+        while self._inbox:
+            item = self._inbox.popleft()
+            n += 1
+            if item[0] == "submit":
+                req = item[1]
+                try:
+                    self.sched.submit(req)
+                    self._post(req.rid, StreamEvent(kind="accepted", rid=req.rid))
+                except QueueFullError as e:
+                    self.counters["rejected"] += 1
+                    self._post(
+                        req.rid,
+                        StreamEvent(kind="rejected", rid=req.rid, reason=str(e)),
+                    )
+                except (ValueError, OverflowError) as e:
+                    # invalid request (too long for the cache, bad token ids):
+                    # reject on the stream instead of killing the pump
+                    self._post(
+                        req.rid,
+                        StreamEvent(kind="rejected", rid=req.rid, reason=str(e)),
+                    )
+            else:
+                _, rid, reason = item
+                self.sched.cancel(rid, reason)
+        return n
+
+    def _pump(self) -> None:
+        while True:
+            drained = self._drain_inbox()
+            if self._stop_flag:
+                break
+            if self.sched.idle and not drained:
+                self._wake.wait(timeout=self._idle_wait_s)
+                self._wake.clear()
+                continue
+            self.sched.step()
+        # shutdown: everything still queued or decoding is cancelled so no
+        # stream is left hanging without a terminal event
+        for rid, rec in list(self.sched.outcomes.items()):
+            if not rec.state.terminal:
+                self.sched.cancel(rid, "server shutting down")
+        self.sched.step()
+
+
+# -- aiohttp transport --------------------------------------------------------
+
+
+def _require_aiohttp() -> None:
+    if web is None:
+        raise RuntimeError(
+            "the websocket front end needs aiohttp (pip install aiohttp); "
+            "the ServeSession core works without it"
+        )
+
+
+def request_from_json(msg: dict) -> Request:
+    """Build a Request from one client JSON frame (validation happens in
+    Request.__post_init__ / Scheduler.submit and surfaces as a rejection)."""
+    return Request(
+        # no dtype coercion: a JSON list of ints arrives as an integer array,
+        # and float token ids must hit Request's loud dtype validation
+        # instead of being silently truncated here
+        prompt=np.asarray(msg["prompt"]),
+        max_new_tokens=int(msg.get("max_new_tokens", 16)),
+        temperature=float(msg.get("temperature", 0.0)),
+        seed=msg.get("seed", 0),
+        stop_tokens=msg.get("stop_tokens"),
+        ttft_deadline_s=msg.get("ttft_deadline_s"),
+        deadline_s=msg.get("deadline_s"),
+        speculate=msg.get("speculate"),
+    )
+
+
+def make_app(session: ServeSession) -> "web.Application":
+    """The aiohttp app: WS streaming + health + metrics."""
+    _require_aiohttp()
+
+    async def healthz(_request):
+        return web.json_response({"ok": True})
+
+    async def metrics(_request):
+        return web.json_response(session.metrics())
+
+    async def stream(request):
+        ws = web.WebSocketResponse()
+        await ws.prepare(request)
+        try:
+            msg = await ws.receive_json()
+            req = request_from_json(msg)
+        except (KeyError, TypeError, ValueError) as e:
+            await ws.send_json(
+                {"type": "rejected", "reason": f"bad request: {e!r}"}
+            )
+            await ws.close()
+            return ws
+        stream = await session.submit_stream(req)
+
+        async def watch_client():
+            # a close/cancel frame — or the socket dropping — cancels the
+            # request at the next chunk boundary (disconnect-as-cancel)
+            async for m in ws:
+                if m.type == WSMsgType.TEXT:
+                    try:
+                        frame = m.json()
+                    except ValueError:
+                        continue
+                    if frame.get("type") == "cancel":
+                        stream.cancel("cancel frame from client")
+            stream.cancel("client disconnected")
+
+        watcher = asyncio.ensure_future(watch_client())
+        try:
+            async for ev in stream:
+                if ws.closed:
+                    stream.cancel("client disconnected")
+                    break
+                try:
+                    await ws.send_json(ev.to_json())
+                except (ConnectionResetError, RuntimeError):
+                    stream.cancel("client disconnected")
+                    break
+        finally:
+            watcher.cancel()
+            if not ws.closed:
+                await ws.close()
+        return ws
+
+    app = web.Application()
+    app.router.add_get("/healthz", healthz)
+    app.router.add_get("/v1/metrics", metrics)
+    app.router.add_get("/v1/stream", stream)
+    return app
+
+
+async def run_server(
+    session: ServeSession, host: str = "127.0.0.1", port: int = 8777
+) -> "web.AppRunner":
+    """Start the app on (host, port); returns the runner (cleanup() to stop).
+    port=0 binds an ephemeral port — read it back from the runner for tests."""
+    _require_aiohttp()
+    app = make_app(session)
+    runner = web.AppRunner(app)
+    await runner.setup()
+    site = web.TCPSite(runner, host, port)
+    await site.start()
+    return runner
+
+
+def bound_port(runner: "web.AppRunner") -> int:
+    for site in runner.sites:
+        server = site._server  # noqa: SLF001 - aiohttp exposes no public port
+        if server and server.sockets:
+            return server.sockets[0].getsockname()[1]
+    raise RuntimeError("server has no bound socket")
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def main() -> None:  # pragma: no cover - CLI wrapper over tested pieces
+    import argparse
+
+    import jax
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.infer import SpecConfig
+    from repro.models import init_params, reduced
+    from repro.quant import QuantPolicy, quantize_params
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--g", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--speculate", type=str, default=None, metavar="QD:GAMMA")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8777)
+    args = ap.parse_args()
+    _require_aiohttp()
+
+    spec = SpecConfig.parse(args.speculate) if args.speculate else None
+    cfg = reduced(get_config(args.arch), d_model=256, n_kv_heads=4,
+                  d_ff=512 if get_config(args.arch).d_ff else 0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.q:
+        params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
+    engine_max_seq = args.max_seq + (spec.gamma + 1 if spec else 0)
+    from repro.infer import Engine
+
+    engine = Engine(cfg, params, max_seq=engine_max_seq)
+
+    async def serve():
+        session = ServeSession(
+            engine, n_slots=args.slots, chunk=args.chunk, speculate=spec,
+            max_queue=args.max_queue,
+        )
+        async with session:
+            runner = await run_server(session, args.host, args.port)
+            print(f"serving {args.arch} (q={args.q}) on "
+                  f"ws://{args.host}:{bound_port(runner)}/v1/stream "
+                  f"({args.slots} slots, chunk={args.chunk}, "
+                  f"max_queue={args.max_queue})")
+            try:
+                while True:
+                    await asyncio.sleep(3600)
+            finally:
+                await runner.cleanup()
+
+    asyncio.run(serve())
+
+
+if __name__ == "__main__":
+    main()

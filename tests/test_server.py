@@ -1,0 +1,359 @@
+"""Async streaming serve front end (launch/server.py, DESIGN.md §9).
+
+The ServeSession core is transport-agnostic and is exercised directly with
+asyncio (no sockets): submit/stream/drain, mid-flight cancellation, loud
+queue-full rejection, invalid-request rejection, and the bounded-buffer
+slow-client policy. One end-to-end WebSocket smoke test (ephemeral port)
+covers the aiohttp transport — submit frame, streamed token frames, cancel
+frame, disconnect-as-cancel, and the metrics endpoint — and skips cleanly
+when aiohttp is absent (the minimal CI leg)."""
+
+import asyncio
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import MarkovCorpus
+from repro.infer import Engine, FaultPlan, Request, RequestState
+from repro.launch.server import ServeSession, StreamEvent, request_from_json
+from repro.models import init_params, reduced
+
+KEY = jax.random.PRNGKey(0)
+MAX_SEQ = 64
+
+
+def _cfg():
+    return reduced(get_config("llama3.2-3b"), d_model=128, n_kv_heads=4, d_ff=256)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine() -> Engine:
+    return Engine(_cfg(), init_params(KEY, _cfg()), max_seq=MAX_SEQ)
+
+
+def _prompt(i: int = 0, plen: int = 5) -> np.ndarray:
+    corpus = MarkovCorpus(_cfg().vocab, seed=3)
+    return corpus.sample(1, plen, seed=200 + i)[0, :plen].astype(np.int32)
+
+
+def _go(coro, timeout=120.0):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+async def _await_true(predicate, *, timeout=30.0, every=0.005):
+    waited = 0.0
+    while not predicate():
+        await asyncio.sleep(every)
+        waited += every
+        if waited > timeout:
+            raise AssertionError("condition not reached in time")
+
+
+# ---------------------------------------------------------------------------
+# session core (no sockets)
+# ---------------------------------------------------------------------------
+
+
+def test_session_streams_match_solo_generate():
+    eng = _engine()
+    p0, p1 = _prompt(0), _prompt(1, plen=6)
+    solo0 = eng.generate(p0[None], 8)
+    solo1 = eng.generate(p1[None], 8, temperature=0.8, seed=7)
+
+    async def run():
+        async with ServeSession(eng, n_slots=2, chunk=3) as sess:
+            s0 = await sess.submit_stream(Request(prompt=p0, max_new_tokens=8))
+            s1 = await sess.submit_stream(
+                Request(prompt=p1, max_new_tokens=8, temperature=0.8, seed=7)
+            )
+            (t0, last0), (t1, last1) = await asyncio.gather(
+                s0.drain(), s1.drain()
+            )
+            m = sess.metrics()
+        return t0, last0, t1, last1, m
+
+    t0, last0, t1, last1, m = _go(run())
+    assert last0.kind == "done" and last0.status == "finished"
+    assert last1.kind == "done" and last1.n_tokens == 8
+    np.testing.assert_array_equal(np.asarray(t0), solo0.tokens[0, p0.size :])
+    np.testing.assert_array_equal(np.asarray(t1), solo1.tokens[0, p1.size :])
+    assert m["by_state"] == {"finished": 2}
+    assert m["ttft_s"]["n"] == 2
+    assert m["server"] == {"overflow_cancelled": 0, "rejected": 0}
+
+
+def test_session_cancel_midflight_survivor_exact():
+    eng = _engine()
+    p0, p1 = _prompt(2), _prompt(3)
+    solo1 = eng.generate(p1[None], 10)
+
+    async def run():
+        async with ServeSession(eng, n_slots=2, chunk=2) as sess:
+            victim = await sess.submit_stream(
+                Request(prompt=p0, max_new_tokens=24)
+            )
+            survivor = await sess.submit_stream(
+                Request(prompt=p1, max_new_tokens=10)
+            )
+            # wait for the victim's first tokens so the cancel is mid-flight
+            first = None
+            async for ev in victim:
+                if ev.kind == "tokens":
+                    first = ev
+                    break
+            victim.cancel("user hit stop")
+            _, vlast = await victim.drain()
+            stoks, slast = await survivor.drain()
+            m = sess.metrics()
+        return first, vlast, stoks, slast, m
+
+    first, vlast, stoks, slast, m = _go(run())
+    assert first is not None and len(first.tokens) > 0
+    assert vlast.kind == "error" and vlast.status == "cancelled"
+    assert vlast.reason == "user hit stop"
+    assert slast.kind == "done"
+    np.testing.assert_array_equal(np.asarray(stoks), solo1.tokens[0, p1.size :])
+    assert m["by_state"]["cancelled"] == 1
+    assert m["counters"]["cancelled"] == 1
+
+
+def test_session_queue_full_surfaces_as_rejected_event():
+    eng = _engine()
+
+    async def run():
+        async with ServeSession(eng, n_slots=1, chunk=2, max_queue=1) as sess:
+            streams = [
+                await sess.submit_stream(
+                    Request(prompt=_prompt(i), max_new_tokens=6)
+                )
+                for i in range(6)
+            ]
+            results = await asyncio.gather(*(s.drain() for s in streams))
+            m = sess.metrics()
+        return results, m
+
+    results, m = _go(run())
+    kinds = [last.kind for _, last in results]
+    assert kinds.count("rejected") >= 1, kinds
+    assert kinds.count("done") >= 1  # whatever was admitted still serves
+    rej = next(last for _, last in results if last.kind == "rejected")
+    assert "admission queue full" in rej.reason
+    assert m["server"]["rejected"] == kinds.count("rejected")
+    assert m["counters"]["rejected_queue_full"] == kinds.count("rejected")
+
+
+def test_session_invalid_request_rejected_not_fatal():
+    eng = _engine()
+
+    async def run():
+        async with ServeSession(eng, n_slots=1, chunk=2) as sess:
+            too_long = await sess.submit_stream(
+                Request(prompt=_prompt(0), max_new_tokens=MAX_SEQ * 2)
+            )
+            _, bad = await too_long.drain()
+            ok = await sess.submit_stream(
+                Request(prompt=_prompt(1), max_new_tokens=4)
+            )
+            toks, last = await ok.drain()
+        return bad, toks, last
+
+    bad, toks, last = _go(run())
+    assert bad.kind == "rejected" and "max_seq" in bad.reason
+    assert last.kind == "done" and len(toks) == 4  # the pump survived
+
+
+def test_session_slow_client_overflow_cancelled():
+    eng = _engine()
+
+    async def run():
+        async with ServeSession(
+            eng, n_slots=1, chunk=1, max_buffer=2
+        ) as sess:
+            stream = await sess.submit_stream(
+                Request(prompt=_prompt(4), max_new_tokens=40)
+            )
+            # never read: the per-stream buffer (2 events) must overflow and
+            # the session must cancel the request instead of buffering 40
+            await _await_true(lambda: sess.counters["overflow_cancelled"] >= 1)
+            toks, last = await stream.drain()
+            m = sess.metrics()
+        return toks, last, m
+
+    toks, last, m = _go(run())
+    assert last.kind == "error" and last.status == "cancelled"
+    assert "slow client" in last.reason and "overflowed" in last.reason
+    assert len(toks) <= 2  # only what fit in the bounded buffer
+    assert m["by_state"].get("cancelled") == 1
+
+
+def test_session_stop_cancels_inflight_with_terminal_events():
+    eng = _engine()
+
+    async def run():
+        sess = ServeSession(eng, n_slots=1, chunk=2)
+        async with sess:
+            stream = await sess.submit_stream(
+                Request(prompt=_prompt(5), max_new_tokens=48)
+            )
+            async for ev in stream:
+                if ev.kind == "tokens":
+                    break
+        # __aexit__ stopped the pump; in-flight work was cancelled and the
+        # stream still got its terminal event (no hanging consumers)
+        _, last = await stream.drain()
+        return last
+
+    last = _go(run())
+    assert last.terminal and last.status == "cancelled"
+    assert "shutting down" in last.reason
+
+
+def test_session_client_stall_fault_still_correct():
+    eng = _engine()
+    p = _prompt(6)
+    solo = eng.generate(p[None], 6)
+
+    async def run():
+        plan = FaultPlan(client_stall={0: 0.01})
+        async with ServeSession(eng, n_slots=1, chunk=2, faults=plan) as sess:
+            stream = await sess.submit_stream(
+                Request(prompt=p, max_new_tokens=6, rid=0)
+            )
+            return await stream.drain()
+
+    toks, last = _go(run())
+    assert last.kind == "done"
+    np.testing.assert_array_equal(np.asarray(toks), solo.tokens[0, p.size :])
+
+
+def test_request_from_json_roundtrip():
+    req = request_from_json(
+        {
+            "prompt": [1, 2, 3],
+            "max_new_tokens": 5,
+            "temperature": 0.5,
+            "seed": 9,
+            "stop_tokens": [2],
+            "deadline_s": 30.0,
+        }
+    )
+    assert req.max_new_tokens == 5 and req.temperature == 0.5
+    assert req.stop_tokens == (2,) and req.deadline_s == 30.0
+    with pytest.raises(KeyError):
+        request_from_json({"max_new_tokens": 5})  # prompt is required
+    with pytest.raises(ValueError, match="integer token ids"):
+        request_from_json({"prompt": [0.5]})
+
+
+def test_stream_event_json_shapes():
+    done = StreamEvent(kind="done", rid=3, status="finished", n_tokens=7)
+    assert done.terminal
+    assert done.to_json() == {
+        "type": "done", "rid": 3, "status": "finished", "n_tokens": 7,
+    }
+    toks = StreamEvent(kind="tokens", rid=3, tokens=[1, 2])
+    assert not toks.terminal
+    assert toks.to_json() == {"type": "tokens", "rid": 3, "tokens": [1, 2]}
+
+
+# ---------------------------------------------------------------------------
+# aiohttp websocket transport (end-to-end over a real socket)
+# ---------------------------------------------------------------------------
+
+
+def test_websocket_end_to_end_stream_cancel_disconnect_metrics():
+    aiohttp = pytest.importorskip("aiohttp")
+    from repro.launch.server import bound_port, run_server
+
+    eng = _engine()
+    p = _prompt(7)
+    solo = eng.generate(p[None], 8)
+    expect = [int(t) for t in solo.tokens[0, p.size :]]
+
+    async def run():
+        session = ServeSession(eng, n_slots=2, chunk=3)
+        async with session:
+            runner = await run_server(session, port=0)
+            port = bound_port(runner)
+            base = f"http://127.0.0.1:{port}"
+            try:
+                async with aiohttp.ClientSession() as client:
+                    # 1) health
+                    async with client.get(f"{base}/healthz") as r:
+                        assert (await r.json()) == {"ok": True}
+
+                    # 2) full stream: submit -> accepted -> tokens -> done
+                    async with client.ws_connect(f"{base}/v1/stream") as ws:
+                        await ws.send_json(
+                            {"prompt": [int(t) for t in p],
+                             "max_new_tokens": 8}
+                        )
+                        got, done_frame = [], None
+                        while True:
+                            frame = await ws.receive_json()
+                            if frame["type"] == "accepted":
+                                continue
+                            if frame["type"] == "tokens":
+                                got.extend(frame["tokens"])
+                                continue
+                            done_frame = frame
+                            break
+                    assert done_frame["type"] == "done"
+                    assert done_frame["status"] == "finished"
+                    assert got == expect
+
+                    # 3) explicit cancel frame mid-flight
+                    async with client.ws_connect(f"{base}/v1/stream") as ws:
+                        await ws.send_json(
+                            {"prompt": [int(t) for t in p],
+                             "max_new_tokens": 48}
+                        )
+                        while True:
+                            frame = await ws.receive_json()
+                            if frame["type"] == "tokens":
+                                break
+                        await ws.send_json({"type": "cancel"})
+                        while True:
+                            frame = await ws.receive_json()
+                            if frame["type"] in ("error", "done"):
+                                break
+                    assert frame["type"] == "error"
+                    assert frame["status"] == "cancelled"
+                    assert "cancel frame" in frame["reason"]
+
+                    # 4) disconnect-as-cancel: drop the socket mid-flight
+                    ws = await client.ws_connect(f"{base}/v1/stream")
+                    await ws.send_json(
+                        {"prompt": [int(t) for t in p], "max_new_tokens": 48}
+                    )
+                    while True:
+                        frame = await ws.receive_json()
+                        if frame["type"] == "tokens":
+                            break
+                    await ws.close()
+                    await _await_true(
+                        lambda: session.sched.counters["cancelled"] >= 2
+                    )
+
+                    # 5) bad first frame -> rejected, socket closed politely
+                    async with client.ws_connect(f"{base}/v1/stream") as ws:
+                        await ws.send_json({"max_new_tokens": 4})
+                        frame = await ws.receive_json()
+                    assert frame["type"] == "rejected"
+                    assert "bad request" in frame["reason"]
+
+                    # 6) metrics endpoint
+                    async with client.get(f"{base}/v1/metrics") as r:
+                        m = await r.json()
+            finally:
+                await runner.cleanup()
+        return m
+
+    m = _go(run(), timeout=180.0)
+    assert m["by_state"]["finished"] == 1
+    assert m["by_state"]["cancelled"] == 2
+    assert m["ttft_s"]["n"] == 1
+    assert m["counters"]["cancelled"] == 2
