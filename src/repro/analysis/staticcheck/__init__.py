@@ -1,0 +1,98 @@
+"""Static contract checker: jaxpr/AST passes proving serving invariants.
+
+The repo's docs make *performance claims* that are really *program-structure
+claims* — "2L+1 small collectives per TP decode step, never a weight gather"
+(parallel/tp.py), "the host syncs once for the whole sequence"
+(infer/engine.py), "packed planes are consumed directly, the dequantized
+block never exists in HBM" (kernels/*), "every autotuned schedule fits
+VMEM" (kernels/autotune.py). Each of those is checkable *before* any code
+runs, by inspecting the traced jaxpr or the source AST. This package is the
+checker; ``python -m repro.analysis.staticcheck`` runs every pass and exits
+nonzero on the first regression, and CI runs it on every push (DESIGN.md
+§10 has the claim → pass → CI-job table).
+
+Passes (one module each):
+
+- :mod:`~repro.analysis.staticcheck.census`    — collective census of the TP
+  decode step: exactly the documented count, and no collective ever touches
+  a weight- or cache-shaped operand;
+- :mod:`~repro.analysis.staticcheck.transfers` — no host callbacks/transfers
+  inside the jitted decode programs, and the decode scan traces exactly once
+  per (config, fmt, tp);
+- :mod:`~repro.analysis.staticcheck.dtypeflow` — packed integer planes stay
+  integer-typed from QuantizedTensor leaves to Pallas kernel entry;
+- :mod:`~repro.analysis.staticcheck.vmem`      — every autotune-table entry
+  and every schedule the registered configs resolve fits the per-core VMEM
+  budget (``kernels/introspect.py``);
+- :mod:`~repro.analysis.staticcheck.lint`      — AST rules for the host/device
+  boundary (``.item()``, undeclared host syncs, raw ``shard_map`` imports,
+  bare ``jax.jit``).
+
+All jaxpr passes trace on :class:`jax.ShapeDtypeStruct` trees — full-size
+registered configs check in seconds with zero weight memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken invariant, with enough provenance to fix it."""
+
+    passname: str  # which pass found it ("census", "lint/host-sync", ...)
+    where: str  # cell id ("census:llama3.2-3b/bcq/tp2") or file:line
+    message: str  # what is wrong, naming the offending leaf/eqn/entry
+
+    def __str__(self) -> str:
+        return f"[{self.passname}] {self.where}: {self.message}"
+
+
+@dataclasses.dataclass
+class PassResult:
+    """One pass over one scope: what was checked and what failed."""
+
+    passname: str
+    checked: int  # units inspected (cells, eqns, files, entries)
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    skipped: List[str] = dataclasses.field(default_factory=list)  # cell: reason
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        state = "ok" if self.ok else f"{len(self.violations)} violation(s)"
+        skip = f", {len(self.skipped)} skipped" if self.skipped else ""
+        return f"{self.passname}: {self.checked} checked{skip} — {state}"
+
+
+def run_all(
+    *,
+    archs: Optional[Sequence[str]] = None,
+    fmts: Optional[Sequence[str]] = None,
+    tps: Sequence[int] = (1, 2, 4),
+    lint_root: Optional[str] = None,
+    trace_once: bool = True,
+) -> List[PassResult]:
+    """Every pass over the registered config × format × tp grid.
+
+    The CLI (``__main__.py``) and the CI gate call this; tests call the
+    individual pass modules directly with injected fixtures."""
+    from repro.analysis.staticcheck import census, dtypeflow, lint, transfers, vmem
+    from repro.analysis.staticcheck.harness import build_cells
+
+    cells, skips = build_cells(archs=archs, fmts=fmts, tps=tps)
+    results = [
+        census.run(cells, skipped=skips),
+        transfers.run(cells, trace_once=trace_once),
+        dtypeflow.run(cells),
+        vmem.run(archs=archs, fmts=fmts, tps=tps),
+        lint.run(root=lint_root),
+    ]
+    return results
+
+
+__all__ = ["PassResult", "Violation", "run_all"]

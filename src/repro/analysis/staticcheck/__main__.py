@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis.staticcheck`` — run every pass, exit
+nonzero on any violation. This is the CI gate (.github/workflows/ci.yml,
+``staticcheck`` job) and the local pre-push check.
+
+``--self-test`` additionally builds the deliberately broken decode step
+(harness.build_injected_cell: a weight-sized all_gather inside the TP step)
+and verifies the census pass CATCHES it — a checker that cannot fail its
+known-bad fixture is reporting nothing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.staticcheck",
+        description="static contract checker: jaxpr/AST serving invariants",
+    )
+    parser.add_argument(
+        "--archs", nargs="*", default=None,
+        help="configs to check (default: every registered arch)",
+    )
+    parser.add_argument(
+        "--fmts", nargs="*", default=None,
+        help="quant formats (default: dense bcq uniform dequant)",
+    )
+    parser.add_argument(
+        "--tps", nargs="*", type=int, default=[1, 2, 4],
+        help="tensor-parallel degrees (default: 1 2 4)",
+    )
+    parser.add_argument(
+        "--no-trace-once", action="store_true",
+        help="skip the (slower) executing compile-cache check",
+    )
+    parser.add_argument(
+        "--self-test", action="store_true",
+        help="also verify the census catches the injected weight-gather fixture",
+    )
+    parser.add_argument(
+        "-v", "--verbose", action="store_true", help="list skipped cells"
+    )
+    args = parser.parse_args(argv)
+
+    # environment BEFORE the first jax import: the TP cells need >= 4 host
+    # devices, and the vmem sweep must resolve schedules without measuring
+    os.environ.setdefault("REPRO_AUTOTUNE", "0")
+    from repro.launch._hostdev import force_host_devices
+
+    force_host_devices(max(args.tps) if args.tps else 4)
+
+    from repro.analysis.staticcheck import run_all
+
+    results = run_all(
+        archs=args.archs, fmts=args.fmts, tps=tuple(args.tps),
+        trace_once=not args.no_trace_once,
+    )
+
+    failed = False
+    for res in results:
+        print(res.summary())
+        if args.verbose:
+            for skip in res.skipped:
+                print(f"  skip: {skip}")
+        for v in res.violations:
+            failed = True
+            print(f"  FAIL {v}")
+
+    if args.self_test:
+        from repro.analysis.staticcheck.census import census_cell
+        from repro.analysis.staticcheck.harness import build_injected_cell
+
+        cell = build_injected_cell()
+        caught = [
+            v for v in census_cell(cell) if "weight/cache-shaped" in v.message
+        ]
+        if caught:
+            print(f"self-test: ok — census caught the injected gather:")
+            print(f"  {caught[0]}")
+        else:
+            failed = True
+            print("self-test: FAIL — injected weight all_gather was NOT caught")
+
+    print("staticcheck:", "FAILED" if failed else "passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Collective census: prove the TP decode step's communication contract.
+
+``parallel/tp.py`` documents the whole point of the sharding layout: per
+decode step exactly one ``psum`` per attention block (after ``wo``), one per
+MLP (after ``w_down``), and one ``all_gather`` of the vocab-sharded logits —
+2L+1 collectives, every one of them activation-sized, **never a weight or
+cache gather**. A refactor that resharded a weight inside the step (the
+classic "all_gather the shard then compute dense" regression) would still
+produce correct tokens, only 10-100x slower — invisible to every numeric
+test. This pass pins the claim on the traced program:
+
+1. **count** — collectives in the step jaxpr, scan-aware (a psum inside the
+   L-iteration layer scan counts L times), must equal the cell's documented
+   ``2L+1``;
+2. **operand size** — no collective operand may have the shape of any
+   weight/cache leaf (global or per-device-local), as indexed by the
+   harness. Violations name the matching leaf and the eqn's source line.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import List, Optional, Sequence
+
+from repro.analysis.staticcheck import PassResult, Violation
+from repro.analysis.staticcheck.harness import TraceCell
+from repro.analysis.staticcheck.jaxpr_walk import aval_shape_dtype, walk
+
+# cross-device communication primitives as they appear in jaxprs
+COLLECTIVE_PRIMS = frozenset(
+    {"psum", "all_gather", "all_to_all", "ppermute", "reduce_scatter",
+     "pmax", "pmin", "pbroadcast"}
+)
+
+
+def census_cell(cell: TraceCell) -> List[Violation]:
+    violations: List[Violation] = []
+    counts: Counter = Counter()
+    for site in walk(cell.closed):
+        if site.prim not in COLLECTIVE_PRIMS:
+            continue
+        counts[site.prim] += site.repeats
+        for invar in site.eqn.invars:
+            sd = aval_shape_dtype(invar)
+            if sd is None:
+                continue
+            shape, _ = sd
+            leaf = cell.shape_index.get(shape)
+            if leaf is not None:
+                violations.append(
+                    Violation(
+                        "census", cell.cell_id,
+                        f"{site.prim} at {site.source()} operates on a "
+                        f"weight/cache-shaped operand {shape} matching leaf "
+                        f"{leaf} — TP must compute on shards, never "
+                        "re-assemble them",
+                    )
+                )
+    total = sum(counts.values())
+    if total != cell.expected_collectives:
+        breakdown = ", ".join(f"{k}x{v}" for k, v in sorted(counts.items()))
+        violations.append(
+            Violation(
+                "census", cell.cell_id,
+                f"collective count {total} ({breakdown or 'none'}) != the "
+                f"documented 2L+1 = {cell.expected_collectives} "
+                "(parallel/tp.py module docs; update BOTH if the topology "
+                "legitimately changed)",
+            )
+        )
+    return violations
+
+
+def run(
+    cells: Sequence[TraceCell], *, skipped: Optional[Sequence[str]] = None
+) -> PassResult:
+    result = PassResult("census", checked=len(cells), skipped=list(skipped or []))
+    for cell in cells:
+        result.violations.extend(census_cell(cell))
+    return result

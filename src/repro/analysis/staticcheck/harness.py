@@ -1,0 +1,250 @@
+"""Trace-cell builder: the programs the jaxpr passes inspect.
+
+One :class:`TraceCell` = one (config, quant format, tp degree) combination,
+holding the jaxpr of the **TP decode step** — the exact program
+``infer/engine.py`` jits on a mesh (``TPContext.forward`` on a decode-shaped
+token/cache) — plus the cell's documented collective count and a shape index
+of every weight/cache leaf (global AND per-device-local shapes) so passes
+can recognise "a collective touched a weight" by operand shape.
+
+Everything traces on :class:`jax.ShapeDtypeStruct` trees (the
+``launch/dryrun.py`` technique): ``jax.eval_shape`` materialises the param
+and cache *structures* of full-size registered configs with zero weight
+memory, ``quant.quantized_structs`` rewrites them to packed form, and
+``jax.make_jaxpr`` stages the step. Quantized cells trace under
+``kernels.ops.impl_mode("deploy")`` so the jaxpr is the Pallas deployment
+program, not the CPU ref oracle (whose dequantize is legitimate and would
+drown the dtype-flow pass in false positives).
+
+Configs whose block set the TP path refuses (MoE, recurrent — see
+``parallel/tp.py::_TP_BLOCKS``) and policy/shape combinations the strict
+spec derivation rejects are reported as *skips with the raising message*,
+never silently dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.qtensor import QuantizedTensor
+from repro.kernels.ops import impl_mode
+from repro.models import init_cache, init_params
+from repro.quant.quantize import QuantPolicy, quantized_structs
+
+# the default grid: every registered arch, dense + every registered format
+DEFAULT_FMTS = ("dense", "bcq", "uniform", "dequant")
+DEFAULT_TPS = (1, 2, 4)
+# struct-trace policy: q/g that divide every registered config's matmul dims
+TRACE_Q, TRACE_G = 3, 128
+_B, _SEQ = 1, 128  # decode-shaped: batch 1, modest cache length
+
+
+@dataclasses.dataclass
+class TraceCell:
+    cell_id: str  # "llama3.2-3b/bcq/tp2"
+    arch: str
+    fmt: str
+    tp: int
+    closed: jax.core.ClosedJaxpr  # the TP decode step
+    expected_collectives: int  # the documented 2L+1 for this config
+    shape_index: Dict[Tuple[int, ...], str]  # weight/cache shape -> leaf path
+
+
+def expected_collectives(cfg) -> int:
+    """The documented TP decective count: one psum after ``wo`` + one after
+    ``w_down`` per block, plus the final vocab-shard ``all_gather`` — 2L+1
+    (parallel/tp.py module docs; pinned by tests/test_staticcheck.py)."""
+    total_blocks = sum(len(pattern) * repeat for pattern, repeat in cfg.stages)
+    return 2 * total_blocks + 1
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path
+    )
+
+
+def _local_shape(shape: Tuple[int, ...], spec, axis: str, tp: int) -> Tuple[int, ...]:
+    parts = tuple(spec) if spec is not None else ()
+    out = list(shape)
+    for i, name in enumerate(parts):
+        if name == axis and i < len(out):
+            out[i] = out[i] // tp
+    return tuple(out)
+
+
+def _index_tree(index, structs, specs, axis: str, tp: int, prefix: str) -> None:
+    """Record every array leaf's global and device-local shape → path."""
+    is_qt = lambda x: isinstance(x, QuantizedTensor)
+    flat, _ = jax.tree_util.tree_flatten_with_path(structs, is_leaf=is_qt)
+    sflat = jax.tree_util.tree_leaves(specs, is_leaf=is_qt)
+    for (path, leaf), spec in zip(flat, sflat):
+        where = f"{prefix}{_path_str(path)}"
+        if isinstance(leaf, QuantizedTensor):
+            planes = [
+                (leaf.packed.shape, spec.packed, f"{where}.packed"),
+                (leaf.scales.shape, spec.scales, f"{where}.scales"),
+            ]
+        else:
+            planes = [(tuple(leaf.shape), spec, where)]
+        for shape, pspec, name in planes:
+            index.setdefault(tuple(shape), name)
+            index.setdefault(_local_shape(shape, pspec, axis, tp), f"{name} (local shard)")
+
+
+def _token_struct(cfg):
+    if cfg.input_kind == "tokens":
+        return jax.ShapeDtypeStruct((_B, 1), jnp.int32)
+    return jax.ShapeDtypeStruct((_B, 1, cfg.d_model), cfg.cdtype)
+
+
+def _build_tp_pieces(arch: str, fmt: str, tp: int):
+    """(cfg, tpc, param structs, cache structs, tok struct, pos struct).
+
+    Raises whatever the TP stack raises for unsupported combinations — the
+    caller converts that into a skip entry."""
+    from repro.parallel.tp import TPContext, make_tp_mesh, tp_param_specs
+
+    cfg = get_config(arch)
+    mesh = make_tp_mesh(tp)
+    tpc = TPContext(cfg, mesh)
+    structs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if fmt != "dense":
+        structs = quantized_structs(
+            structs, QuantPolicy(TRACE_Q, g=TRACE_G, fmt=fmt)
+        )
+    tpc.param_spec_tree = tp_param_specs(cfg, structs, tpc.ax)
+    cache = jax.eval_shape(lambda: init_cache(cfg, _B, _SEQ))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cfg, tpc, structs, cache, _token_struct(cfg), pos
+
+
+def _step_fn(cfg, tpc):
+    tok_kw = "tokens" if cfg.input_kind == "tokens" else "embeddings"
+
+    def step(params, cache, tok, pos):
+        kw = {tok_kw: tok}
+        if cfg.family == "vlm":
+            kw["image_emb"] = None
+        logits, cache, _ = tpc.forward(
+            params, **kw, cache=cache, pos=pos, logits_mode="last"
+        )
+        return logits, cache
+
+    return step
+
+
+def build_cell(arch: str, fmt: str, tp: int) -> TraceCell:
+    cfg, tpc, structs, cache, tok, pos = _build_tp_pieces(arch, fmt, tp)
+    with impl_mode("deploy"):
+        closed = jax.make_jaxpr(_step_fn(cfg, tpc))(structs, cache, tok, pos)
+    index: Dict[Tuple[int, ...], str] = {}
+    _index_tree(index, structs, tpc.param_spec_tree, tpc.axis_name, tp, "params/")
+    _index_tree(
+        index, cache, tpc.cache_spec_tree(cache), tpc.axis_name, tp, "cache/"
+    )
+    return TraceCell(
+        cell_id=f"{arch}/{fmt}/tp{tp}",
+        arch=arch, fmt=fmt, tp=tp,
+        closed=closed,
+        expected_collectives=expected_collectives(cfg),
+        shape_index=index,
+    )
+
+
+def build_cells(
+    *,
+    archs: Optional[Sequence[str]] = None,
+    fmts: Optional[Sequence[str]] = None,
+    tps: Sequence[int] = DEFAULT_TPS,
+) -> Tuple[List[TraceCell], List[str]]:
+    """The full grid → (cells, skip descriptions). Never raises for
+    unsupported combinations; every absence is named."""
+    cells: List[TraceCell] = []
+    skips: List[str] = []
+    for arch in archs or ARCH_IDS:
+        for fmt in fmts or DEFAULT_FMTS:
+            for tp in tps:
+                try:
+                    cells.append(build_cell(arch, fmt, tp))
+                except (NotImplementedError, ValueError) as e:
+                    first = str(e).splitlines()[0]
+                    skips.append(f"{arch}/{fmt}/tp{tp}: {first}")
+    return cells, skips
+
+
+def build_injected_cell(
+    arch: str = "llama3.2-3b", fmt: str = "bcq", tp: int = 2
+) -> TraceCell:
+    """A deliberately broken decode step: the normal forward PLUS a
+    weight-sized ``all_gather`` of the first sharded packed plane — the
+    anti-pattern the collective census exists to catch (a TP implementation
+    that re-assembles a weight instead of computing on shards). Used by the
+    CLI self-test and tests/test_staticcheck.py; never by serving code."""
+    from repro.parallel.compat import shard_map
+
+    cfg, tpc, structs, cache, tok, pos = _build_tp_pieces(arch, fmt, tp)
+    axis = tpc.axis_name
+
+    # first QuantizedTensor (or dense) weight leaf with a model-sharded plane
+    is_qt = lambda x: isinstance(x, QuantizedTensor)
+    flat, _ = jax.tree_util.tree_flatten_with_path(structs, is_leaf=is_qt)
+    sflat = jax.tree_util.tree_leaves(tpc.param_spec_tree, is_leaf=is_qt)
+    target = None
+    for (path, leaf), spec in zip(flat, sflat):
+        if isinstance(leaf, QuantizedTensor):
+            if axis in tuple(spec.packed):
+                target = (path, leaf.packed, spec.packed)
+                break
+        elif spec is not None and axis in tuple(spec):
+            target = (path, leaf, spec)
+            break
+    if target is None:
+        raise RuntimeError(f"no sharded weight leaf in {arch}/{fmt}/tp{tp}")
+    path, plane, pspec = target
+    shard_dim = tuple(pspec).index(axis)
+
+    def gather_weight(p):
+        return jax.lax.all_gather(p, axis, axis=shard_dim, tiled=True)
+
+    gather = shard_map(
+        gather_weight,
+        mesh=tpc.mesh,
+        in_specs=(pspec,),
+        out_specs=P(*([None] * len(plane.shape))),
+        check_vma=False,
+    )
+    base = _step_fn(cfg, tpc)
+
+    def pluck(tree):
+        node = tree
+        for pp in path:
+            node = node[getattr(pp, "key", getattr(pp, "idx", pp))]
+        return node
+
+    def bad_step(params, cache, tok, pos):
+        logits, cache = base(params, cache, tok, pos)
+        qt = pluck(params)
+        p = qt.packed if isinstance(qt, QuantizedTensor) else qt
+        gathered = gather(p)  # the injected weight re-assembly
+        return logits, cache, gathered.sum()
+
+    with impl_mode("deploy"):
+        closed = jax.make_jaxpr(bad_step)(structs, cache, tok, pos)
+    index: Dict[Tuple[int, ...], str] = {}
+    _index_tree(index, structs, tpc.param_spec_tree, axis, tp, "params/")
+    _index_tree(index, cache, tpc.cache_spec_tree(cache), axis, tp, "cache/")
+    return TraceCell(
+        cell_id=f"{arch}/{fmt}/tp{tp}+injected-weight-gather",
+        arch=arch, fmt=fmt, tp=tp,
+        closed=closed,
+        expected_collectives=expected_collectives(cfg),
+        shape_index=index,
+    )

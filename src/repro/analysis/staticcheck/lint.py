@@ -1,0 +1,182 @@
+"""AST lint: repo-specific host/device-boundary rules.
+
+The jaxpr passes prove what happens *inside* jit; these rules police the
+Python that surrounds it. Each rule encodes a lesson this codebase already
+paid for (DESIGN.md §10):
+
+- ``no-item``       — ``.item()`` on a device value blocks the dispatch
+  queue per element; there is no legitimate hot-path use, so no pragma
+  escape exists for this rule.
+- ``host-sync``     — ``np.asarray``/``np.array``/``jax.device_get``/
+  ``jax.block_until_ready``/``float(f(...))``/``int(f(...))`` force a
+  device→host sync. They are sometimes exactly right (fetching final
+  tokens, the scheduler's chunk-boundary guard) — so the rule demands each
+  site *declare itself* with ``# staticcheck: host-sync(reason)`` on the
+  same line. Undeclared syncs are violations; the pragma inventory is the
+  audit trail.
+- ``raw-shard-map`` — ``jax.experimental.shard_map`` may be imported ONLY
+  by ``parallel/compat.py`` (the version-compat seam); everyone else goes
+  through it so a JAX upgrade is a one-file change.
+- ``bare-jit``      — ``jax.jit(f)`` with zero keywords in hot-path
+  modules: nearly every jit here needs ``static_argnames`` or
+  ``donate_argnums``; a bare one is usually an unconsidered default.
+  Intentional ones declare ``# staticcheck: jit-ok(reason)``.
+
+Scope: ``infer/``, ``kernels/``, ``models/``, ``parallel/`` under
+``src/repro`` (the serving hot path); ``raw-shard-map`` scans all of
+``src/repro``. Tests/benchmarks/launch scripts are host programs and out
+of scope by design.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.staticcheck import PassResult, Violation
+
+HOT_DIRS = ("infer", "kernels", "models", "parallel")
+_PRAGMA = re.compile(r"#\s*staticcheck:\s*([a-z-]+)\(([^)]*)\)")
+
+_NP_NAMES = {"np", "numpy"}
+_NP_SYNC_ATTRS = {"asarray", "array"}
+_JAX_SYNC_ATTRS = {"device_get", "block_until_ready"}
+
+
+def _pragmas_by_line(source: str):
+    out = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA.search(line)
+        if m:
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+def _dotted(node) -> Optional[str]:
+    """'jax.jit' / 'np.asarray' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def lint_source(source: str, relpath: str) -> List[Violation]:
+    """All rule hits for one file. ``relpath`` is repo-relative for messages
+    and for the compat-seam allowance."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation("lint", f"{relpath}:{e.lineno}", f"unparseable: {e.msg}")]
+    pragmas = _pragmas_by_line(source)
+    in_hot = any(f"/{d}/" in f"/{relpath}" or relpath.startswith(f"{d}/") for d in HOT_DIRS)
+    is_compat_seam = relpath.endswith("parallel/compat.py") or relpath == "parallel/compat.py"
+    out: List[Violation] = []
+
+    def has(line: int, tag: str) -> bool:
+        return tag in pragmas.get(line, ())
+
+    for node in ast.walk(tree):
+        # raw-shard-map: applies everywhere except the compat seam
+        if isinstance(node, ast.ImportFrom) and not is_compat_seam:
+            mod = node.module or ""
+            if mod == "jax.experimental.shard_map" or (
+                mod == "jax.experimental"
+                and any(a.name == "shard_map" for a in node.names)
+            ):
+                out.append(
+                    Violation(
+                        "lint/raw-shard-map", f"{relpath}:{node.lineno}",
+                        "import shard_map from repro.parallel.compat, not "
+                        "jax.experimental (version-compat seam)",
+                    )
+                )
+        if isinstance(node, ast.Import) and not is_compat_seam:
+            for a in node.names:
+                if a.name.startswith("jax.experimental.shard_map"):
+                    out.append(
+                        Violation(
+                            "lint/raw-shard-map", f"{relpath}:{node.lineno}",
+                            "import shard_map from repro.parallel.compat, not "
+                            "jax.experimental (version-compat seam)",
+                        )
+                    )
+
+        if not in_hot or not isinstance(node, ast.Call):
+            continue
+        line = node.lineno
+        name = _dotted(node.func)
+
+        # no-item: .item() call on anything — no pragma escape
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            out.append(
+                Violation(
+                    "lint/no-item", f"{relpath}:{line}",
+                    ".item() blocks the dispatch queue per element; fetch "
+                    "whole arrays once (np.asarray + host-sync pragma) or "
+                    "keep the value on device",
+                )
+            )
+            continue
+
+        # host-sync: device→host fetches must declare themselves
+        sync = False
+        if name is not None:
+            head, _, tail = name.rpartition(".")
+            if head in _NP_NAMES and tail in _NP_SYNC_ATTRS:
+                sync = True
+            if head == "jax" and tail in _JAX_SYNC_ATTRS:
+                sync = True
+        if name in ("float", "int") and node.args and isinstance(node.args[0], ast.Call):
+            sync = True  # float(f(...)): classic silent sync on a device value
+        if sync and not has(line, "host-sync"):
+            out.append(
+                Violation(
+                    "lint/host-sync", f"{relpath}:{line}",
+                    f"{name}(...) forces a device→host sync; if intentional, "
+                    "declare it: `# staticcheck: host-sync(reason)`",
+                )
+            )
+
+        # bare-jit: jax.jit with zero keywords in hot paths
+        if name == "jax.jit" and not node.keywords and not has(line, "jit-ok"):
+            out.append(
+                Violation(
+                    "lint/bare-jit", f"{relpath}:{line}",
+                    "bare jax.jit in a hot path: consider static_argnames/"
+                    "donate_argnums, or declare `# staticcheck: jit-ok(reason)`",
+                )
+            )
+    return out
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", ".."))  # .../src/repro
+
+
+def iter_files(root: Optional[str] = None):
+    root = root or repo_root()
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                full = os.path.join(dirpath, fn)
+                yield full, os.path.relpath(full, root)
+
+
+def run(root: Optional[str] = None, *, rules: Optional[Sequence[str]] = None) -> PassResult:
+    result = PassResult("lint", checked=0)
+    for full, rel in iter_files(root):
+        result.checked += 1
+        with open(full) as f:
+            source = f.read()
+        hits = lint_source(source, rel)
+        if rules is not None:
+            hits = [v for v in hits if v.passname.split("/", 1)[-1] in rules]
+        result.violations.extend(hits)
+    return result

@@ -1,0 +1,105 @@
+"""Transfer/sync pass: the jitted decode programs never talk to the host.
+
+``infer/engine.py`` claims "the host syncs once for the whole sequence":
+all sampling happens on device inside the decode scan, and the only host
+round trips are the prompt upload and the final token fetch. Two things
+would silently break that:
+
+1. a **host callback staged into the jitted program** (``jax.debug.print``
+   left over from debugging, a ``pure_callback`` smuggled in by a helper) —
+   every decode step would stall on the host. Checked on the traced step
+   jaxpr: none of the callback/infeed primitives may appear anywhere in it.
+2. a **retrace per call** (an unhashable static, a Python-object leaf that
+   fails pytree equality, a shape that changes when it shouldn't) — every
+   ``generate`` would pay tracing + compilation again, the classic "why is
+   serving 100x slower than the benchmark" bug. Checked by executing two
+   generations on a reduced real engine and asserting the jitted entries'
+   compile-cache size is exactly 1.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.analysis.staticcheck import PassResult, Violation
+from repro.analysis.staticcheck.harness import TraceCell
+from repro.analysis.staticcheck.jaxpr_walk import walk
+
+# primitives that move control or data to the host mid-program
+TRANSFER_PRIMS = frozenset(
+    {"debug_callback", "pure_callback", "io_callback", "callback",
+     "debug_print", "outside_call", "infeed", "outfeed"}
+)
+
+
+def transfer_violations(cell: TraceCell) -> List[Violation]:
+    out = []
+    for site in walk(cell.closed):
+        if site.prim in TRANSFER_PRIMS:
+            out.append(
+                Violation(
+                    "transfers", cell.cell_id,
+                    f"host-transfer primitive {site.describe()} inside the "
+                    "jitted decode step — every step would sync with the host",
+                )
+            )
+    return out
+
+
+# -- trace-once harness ------------------------------------------------------
+
+
+def _reduced_engine(fmt: str):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.infer.engine import Engine
+    from repro.models import init_params, reduced
+    from repro.quant.quantize import QuantPolicy, quantize_params
+
+    cfg = reduced(get_config("llama3.2-3b"), d_model=128, n_kv_heads=4, d_ff=256)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if fmt != "dense":
+        params = quantize_params(params, QuantPolicy(3, g=32, iters=2, fmt=fmt))
+    return Engine(cfg, params, max_seq=64), np
+
+
+def trace_once_check(fmts: Sequence[str] = ("dense", "bcq")) -> Tuple[int, List[Violation]]:
+    """Two identical-shape generations per format; every jitted decode entry
+    must have compiled exactly once. Returns (engines checked, violations)."""
+    violations: List[Violation] = []
+    for fmt in fmts:
+        eng, np = _reduced_engine(fmt)
+        prompt = np.zeros((1, 4), np.int32)
+        eng.generate(prompt, 4)
+        eng.generate(np.ones((1, 4), np.int32), 4)
+        for name, jitted in (
+            ("_prefill", eng._prefill),
+            ("_decode", eng._decode),  # untraced under scan=True: size 0 is fine
+            ("_scan_decode", eng._scan_decode),
+        ):
+            size = jitted._cache_size()
+            if size > 1:
+                violations.append(
+                    Violation(
+                        "transfers/trace-once", f"engine[{fmt}].{name}",
+                        f"compile cache holds {size} entries after two "
+                        "identical-shape generations — something retraces "
+                        "per call (unhashable static? non-canonical pytree?)",
+                    )
+                )
+    return len(fmts), violations
+
+
+def run(cells: Sequence[TraceCell], *, trace_once: bool = True) -> PassResult:
+    result = PassResult("transfers", checked=len(cells))
+    for cell in cells:
+        result.violations.extend(transfer_violations(cell))
+    if trace_once:
+        n, vs = trace_once_check()
+        result.checked += n
+        result.violations.extend(vs)
+    else:
+        result.skipped.append("trace-once: disabled by caller")
+    return result

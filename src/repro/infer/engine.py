@@ -77,8 +77,8 @@ class GenerationResult:
 def stop_positions_for(new_tokens: np.ndarray, stop_tokens) -> np.ndarray:
     """(B, N) generated tokens -> (B,) index of each row's first stop token
     (-1 if the row never emits one)."""
-    new_tokens = np.asarray(new_tokens)
-    hits = np.isin(new_tokens, np.asarray(list(stop_tokens), np.int32))
+    new_tokens = np.asarray(new_tokens)  # staticcheck: host-sync(host-side stop-token scan on emitted tokens)
+    hits = np.isin(new_tokens, np.asarray(list(stop_tokens), np.int32))  # staticcheck: host-sync(stop-token ids are host ints)
     first = np.argmax(hits, axis=1)
     return np.where(hits.any(axis=1), first, -1).astype(np.int32)
 
@@ -407,8 +407,17 @@ class Engine:
             )
             return buf[:, :n_steps], stats
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+        # raw (unjitted) closures: repro.analysis.staticcheck traces these with
+        # jax.make_jaxpr to prove the collective/transfer/dtype invariants of
+        # the exact programs the jitted attributes below compile
+        self.prefill_fn = _prefill
+        self.decode_step_fn = _decode
+        self.scan_decode_fn = _scan_decode
+
+        # QuantizedTensor statics (g/k/o/fmt) travel in the pytree treedef, so
+        # the param tree needs no static_argnums here
+        self._prefill = jax.jit(_prefill)  # staticcheck: jit-ok(pytree statics; no donation — unit-cache template is reused)
+        self._decode = jax.jit(_decode)  # staticcheck: jit-ok(pytree statics; cache threaded functionally by scan callers)
         self._scan_decode = jax.jit(
             _scan_decode, static_argnames=("n_steps", "greedy")
         )
@@ -436,7 +445,7 @@ class Engine:
         self._release = jax.jit(_release, donate_argnums=(0,))
         # row-finiteness of the carried logits: the scheduler's NaN/inf guard
         # reads (B,) bools per chunk instead of hauling (B, vocab) to host
-        self._finite_rows = jax.jit(lambda lg: jnp.isfinite(lg).all(axis=-1))
+        self._finite_rows = jax.jit(lambda lg: jnp.isfinite(lg).all(axis=-1))  # staticcheck: jit-ok(single-array reduction, nothing to donate or mark static)
         self._admit_spec = jax.jit(_admit_spec, donate_argnums=(0,))
         self._scan_spec_slots = jax.jit(
             _scan_spec_slots, static_argnames=("n_chunks", "gamma"),
@@ -660,7 +669,7 @@ class Engine:
         """(B,) host bools: row b's carried next-token logits are all finite.
         The scheduler's NaN/inf guard polls this at chunk boundaries and
         quarantines exactly the poisoned rows."""
-        return np.asarray(self._finite_rows(slots["logits"]))
+        return np.asarray(self._finite_rows(slots["logits"]))  # staticcheck: host-sync(the documented chunk-boundary guard poll — (B,) bools, not (B, vocab))
 
     def poison_logit_row(self, slots: dict, slot: int) -> dict:
         """Fault-injection hook (infer/faults.py): overwrite one row's
@@ -721,7 +730,7 @@ class Engine:
                 f"larger max_seq or shorten the request)"
             )
         if cfg.input_kind == "tokens":
-            pt = np.asarray(prompt_tokens)
+            pt = np.asarray(prompt_tokens)  # staticcheck: host-sync(prompt validation before any device work)
             if pt.size and (pt.min() < 0 or pt.max() >= cfg.vocab):
                 raise ValueError(
                     f"prompt token ids must lie in [0, vocab={cfg.vocab}); got "
@@ -764,7 +773,7 @@ class Engine:
                 n_steps=n_steps, gamma=speculate.gamma, greedy=greedy,
             )
             tokens = np.concatenate(
-                [np.asarray(prompt_tokens), np.asarray(toks)], axis=1
+                [np.asarray(prompt_tokens), np.asarray(toks)], axis=1  # staticcheck: host-sync(one fetch for the whole speculative generation)
             )
             acc, prop, chunks = int(acc), int(prop), int(chunks)
             return _result(
@@ -790,24 +799,24 @@ class Engine:
                 n_steps=n_steps,
                 greedy=greedy,
             )
-            tokens = np.concatenate([np.asarray(prompt_tokens), np.asarray(toks)], axis=1)
+            tokens = np.concatenate([np.asarray(prompt_tokens), np.asarray(toks)], axis=1)  # staticcheck: host-sync(one fetch for the whole scanned decode)
             return _result(tokens)
 
-        out = [np.asarray(prompt_tokens)] if cfg.input_kind == "tokens" else []
+        out = [np.asarray(prompt_tokens)] if cfg.input_kind == "tokens" else []  # staticcheck: host-sync(prompt is host input)
         for step in range(n_steps):
             if not greedy:
                 key, sub = jax.random.split(key)
                 tok = _sample(logits[:, -1], sub, temperature, greedy=False)[:, None]
             else:
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            out.append(np.asarray(tok))
+            out.append(np.asarray(tok))  # staticcheck: host-sync(per-token step loop — the scan path exists to avoid this)
             if cfg.input_kind != "tokens":
                 if self.embed_fn is None:
                     raise ValueError(
                         "embedding-input model: pass embed_fn to Engine to map "
                         "sampled codes back to frame embeddings"
                     )
-                tok = jnp.asarray(self.embed_fn(np.asarray(tok))).astype(cfg.cdtype)
+                tok = jnp.asarray(self.embed_fn(np.asarray(tok))).astype(cfg.cdtype)  # staticcheck: host-sync(embed_fn is host-side by contract)
             logits, cache = self._decode(
                 self.params, tok, cache, jnp.int32(s + step)
             )

@@ -128,7 +128,7 @@ class Request:
     rid: Optional[int] = None  # assigned at submit() if None
 
     def __post_init__(self):
-        arr = np.asarray(self.prompt)
+        arr = np.asarray(self.prompt)  # staticcheck: host-sync(request validation on host input)
         if arr.dtype.kind not in "iu":
             # silent float->int32 casting would truncate values the caller
             # never meant as token ids
@@ -396,7 +396,7 @@ class Scheduler:
         tokens: Optional[List[int]] = None,
     ) -> None:
         rec.transition(state, self._clock(), reason)
-        rec.new_tokens = np.asarray(tokens or [], np.int32)
+        rec.new_tokens = np.asarray(tokens or [], np.int32)  # staticcheck: host-sync(tokens already host-side)
         rec.n_tokens = int(rec.new_tokens.size)
         if self.on_event is not None:
             self.on_event(rec)
@@ -556,7 +556,7 @@ class Scheduler:
         return Completion(
             rid=tenant.req.rid,
             prompt=tenant.req.prompt,
-            new_tokens=np.asarray(tenant.emitted, np.int32),
+            new_tokens=np.asarray(tenant.emitted, np.int32),  # staticcheck: host-sync(emitted list is host-side)
             admitted_at_step=tenant.admitted_at_step,
             finished_at_step=self.decode_steps,
             stopped=stopped,
@@ -601,7 +601,7 @@ class Scheduler:
                 tenant = _Tenant(req, self.decode_steps)
                 self._tenants[slot] = tenant
                 if self.speculate is not None:
-                    t0 = int(np.asarray(self.slots["t_pend"][slot]))
+                    t0 = int(np.asarray(self.slots["t_pend"][slot]))  # staticcheck: host-sync(per-admission fetch of the pre-sampled first token)
                     stopped = self._record_tokens(tenant, [t0])
                     if stopped or len(tenant.emitted) >= req.max_new_tokens:
                         done.append(self._finish(slot, stopped=stopped))
@@ -697,9 +697,9 @@ class Scheduler:
         self.decode_steps += self.chunk
         if self.speculate is not None:
             self.chunk_rows += self.n_active * self.chunk
-        toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))
-        valid = np.asarray(valid)
-        self.steps_active += int(valid.sum())
+        toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))  # staticcheck: host-sync(the one documented per-chunk fetch)
+        valid = np.asarray(valid)  # staticcheck: host-sync(the one documented per-chunk fetch)
+        self.steps_active += int(valid.sum())  # staticcheck: host-sync(valid already fetched above)
 
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:

@@ -85,13 +85,95 @@ def backend_tag(interpret: bool) -> str:
 # ---------------------------------------------------------------------------
 
 
+def parse_key(key: str) -> Tuple[str, str, int, int, int, int, int]:
+    """``make_key`` output → ``(impl, backend, B, k, o, q, g)``.
+
+    Raises ``ValueError`` naming the key on any malformed segment — table
+    entries that cannot be parsed cannot be trusted to describe a schedule.
+    """
+    parts = key.split("/")
+    if len(parts) != 7:
+        raise ValueError(
+            f"autotune key {key!r}: expected impl/backend/B*/k*/o*/q*/g*"
+        )
+    impl, backend = parts[0], parts[1]
+    nums = []
+    for tag, seg in zip("Bkoqg", parts[2:]):
+        if not seg.startswith(tag) or not seg[len(tag):].isdigit():
+            raise ValueError(
+                f"autotune key {key!r}: segment {seg!r} is not {tag}<int>"
+            )
+        nums.append(int(seg[len(tag):]))
+    if not impl or not backend:
+        raise ValueError(f"autotune key {key!r}: empty impl/backend segment")
+    return (impl, backend, *nums)
+
+
+def validate_entry(key: str, blocks, *, path: str = "<in-memory>") -> Tuple[int, int]:
+    """One table entry → validated ``(block_k, block_o)``; loud on any lie.
+
+    Checks, in order: key parses; blocks is a pair of positive ints; the
+    blocks satisfy the kernels' divisibility contract (``_valid_bk`` +
+    ``o % block_o``); and — for real-hardware backends only (interpret-mode
+    entries have no VMEM) — the impl's registered per-grid-step estimate
+    fits :func:`repro.kernels.introspect.vmem_budget`. Impls with no
+    registered estimator skip the budget check (unpriceable ≠ invalid).
+    """
+    impl, backend, B, k, o, q, g = parse_key(key)
+    if (
+        not isinstance(blocks, (list, tuple))
+        or len(blocks) != 2
+        or not all(isinstance(b, int) and b > 0 for b in blocks)
+    ):
+        raise ValueError(
+            f"autotune table {path}: entry {key!r} blocks {blocks!r} "
+            "must be a [block_k, block_o] pair of positive ints"
+        )
+    bk, bo = blocks
+    if not _valid_bk(bk, k, g) or o % bo:
+        raise ValueError(
+            f"autotune table {path}: entry {key!r} blocks ({bk}, {bo}) violate "
+            f"the tiling contract (k={k} % block_k == 0, o={o} % block_o == 0, "
+            f"block_k % g == 0 or g % block_k == 0 with g={g})"
+        )
+    if not backend.endswith("-interpret"):
+        from repro.kernels import introspect
+
+        try:
+            need = introspect.vmem_bytes(impl, B=B, block_k=bk, block_o=bo, q=q, g=g)
+        except KeyError:
+            return bk, bo
+        budget = introspect.vmem_budget()
+        if need > budget:
+            raise ValueError(
+                f"autotune table {path}: entry {key!r} blocks ({bk}, {bo}) "
+                f"need ~{need} B of VMEM per grid step, over the "
+                f"{budget} B budget ({introspect.VMEM_BYTES} B/core x "
+                f"{introspect.VMEM_SLACK} slack) — re-measure with smaller blocks"
+            )
+    return bk, bo
+
+
+def validate_table(table: Dict[str, Tuple[int, int]], *, path: str) -> None:
+    for key, blocks in table.items():
+        validate_entry(key, blocks, path=path)
+
+
 def _load_table(path: str) -> Dict[str, Tuple[int, int]]:
+    """Read one persisted table. Missing file → empty (tables are optional);
+    unparseable JSON → loud ``ValueError`` naming the file (a corrupt table
+    silently dropped would re-measure — or worse, heuristically guess —
+    schedules the operator thinks are pinned)."""
     try:
         with open(path) as f:
             raw = json.load(f)
-        return {k: tuple(v) for k, v in raw.items() if len(v) == 2}
-    except (OSError, ValueError):
+    except OSError:
         return {}
+    except ValueError as e:
+        raise ValueError(f"autotune table {path} is not valid JSON: {e}") from e
+    if not isinstance(raw, dict):
+        raise ValueError(f"autotune table {path}: top level must be an object")
+    return {k: tuple(v) if isinstance(v, list) else v for k, v in raw.items()}
 
 
 def _ensure_persisted_loaded() -> None:
@@ -100,7 +182,10 @@ def _ensure_persisted_loaded() -> None:
         return
     # user cache wins over checked-in defaults: it was measured on this host
     merged = _load_table(_TABLE_PATH)
-    merged.update(_load_table(_user_cache_path()))
+    validate_table(merged, path=_TABLE_PATH)
+    user = _load_table(_user_cache_path())
+    validate_table(user, path=_user_cache_path())
+    merged.update(user)
     for key, blocks in merged.items():
         _cache.setdefault(key, blocks)
     _persisted_loaded = True
@@ -110,7 +195,10 @@ def _persist(key: str, blocks: Tuple[int, int]) -> None:
     path = _user_cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        table = _load_table(path)
+        try:
+            table = _load_table(path)
+        except ValueError:
+            table = {}  # corrupt user cache: start over rather than refuse to tune
         table[key] = blocks
         with open(path, "w") as f:
             json.dump({k: list(v) for k, v in sorted(table.items())}, f, indent=1)
@@ -194,12 +282,12 @@ register_measure_kernel("lutgemm", _load_lutgemm, _bcq_meas_scales)
 
 def _time_once(fn, *args) -> float:
     out = fn(*args)  # warmup: compile/trace
-    jax.block_until_ready(out)
+    jax.block_until_ready(out)  # staticcheck: host-sync(wall-clock timing sweep)
     best = float("inf")
     for _ in range(2):
         t0 = time.perf_counter()
         out = fn(*args)
-        jax.block_until_ready(out)
+        jax.block_until_ready(out)  # staticcheck: host-sync(wall-clock timing sweep)
         best = min(best, time.perf_counter() - t0)
     return best
 

@@ -34,6 +34,26 @@ DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 256
 
 
+def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
+    """Per-grid-step VMEM estimate for this kernel's BlockSpecs (see
+    ``kernels/introspect.py``): double-buffered x/packed/scales/out blocks,
+    the f32 accumulator scratch, and the unpacked sign planes + effective
+    weight block the body materialises."""
+    groups = max(block_k // g, 1)
+    io = 2 * (
+        B * block_k * 4  # x block, f32
+        + q * (block_k // 8) * block_o  # packed block, uint8
+        + q * groups * block_o * 4  # scales block (<= f32)
+        + B * block_o * 4  # out block, f32
+    )
+    body = (
+        q * block_k * block_o * 4  # unpacked ±1 signs
+        + block_k * block_o * 4  # w_eff
+        + B * block_o * 4  # acc scratch
+    )
+    return io + body
+
+
 def _unpack_block(packed: jax.Array, compute_dtype) -> jax.Array:
     """uint8 (q, bk/8, bo) → ±1 (q, bk, bo) in compute_dtype (VPU shift/mask)."""
     q, kc, bo = packed.shape
@@ -161,3 +181,8 @@ def bcq_mm(
         interpret=interpret,
         compute_dtype=compute_dtype,
     )
+
+
+from repro.kernels.introspect import register_vmem_estimator  # noqa: E402
+
+register_vmem_estimator("bcq_mm", vmem_bytes)

@@ -35,6 +35,25 @@ DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 256
 
 
+def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
+    """Per-grid-step VMEM estimate for the *materialise* kernel (the GEMM half
+    is a stock XLA dot — XLA owns its tiling). ``B`` does not enter this
+    kernel's schedule; it stays in the signature so every estimator prices the
+    same key tuple (``kernels/introspect.py``)."""
+    del B
+    groups = max(block_k // g, 1)
+    io = 2 * (
+        q * (block_k // 8) * block_o  # packed bit planes, uint8
+        + 2 * groups * block_o * 4  # (scale, zero) block (<= f32)
+        + block_k * block_o * 4  # dense out block, f32
+    )
+    body = (
+        q * block_k * block_o * 4  # unpacked bit planes
+        + 2 * block_k * block_o * 4  # reassembled codes + affine w
+    )
+    return io + body
+
+
 def _dequant_kernel(packed_ref, scales_ref, out_ref, *, g: int, bk: int, out_dtype):
     codes = _unpack_codes_block(packed_ref[...], jnp.float32)  # (bk, bo)
     scales = scales_ref[...].astype(jnp.float32)  # (2, bk//g or 1, bo)
@@ -119,3 +138,8 @@ def dequant_mm(
         interpret=interpret, out_dtype=jnp.float32,
     )
     return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+from repro.kernels.introspect import register_vmem_estimator  # noqa: E402
+
+register_vmem_estimator("dequant_mm", vmem_bytes)

@@ -1,0 +1,72 @@
+"""Kernel BlockSpec introspection: per-grid-step VMEM estimates + budgets.
+
+Every Pallas kernel module in this package exports a ``vmem_bytes`` hook that
+prices ONE grid step of its own schedule from the same ``(B, block_k,
+block_o, q, g)`` parameters its ``pl.pallas_call`` derives its BlockSpecs
+from: the HBM→VMEM input/output blocks (counted twice — Mosaic
+double-buffers the pipeline copies), the ``scratch_shapes`` accumulator, and
+the dominant in-register intermediates the kernel body materialises (the
+unpacked sign/code planes, the LUT and its gathered partials). The estimate
+is deliberately a slight over-count: it is a *budget gate*, not a profiler —
+``repro.analysis.staticcheck`` and ``kernels/autotune.py`` use it to reject
+schedules that cannot fit before Mosaic ever sees them.
+
+The budget constant is the TPU architecture number (VMEM ≈ 16 MB/core — the
+on-chip vector memory that feeds the compute units; see the Pallas/TPU
+memory-hierarchy table). ``VMEM_SLACK`` reserves headroom for Mosaic's own
+spills/semaphores so "fits the estimate" implies "compiles and runs".
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+# TPU VMEM is ~16 MB per core; keep a safety margin for Mosaic-managed
+# buffers (semaphores, spills, the grid bookkeeping) on top of our estimate.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_SLACK = 0.9  # usable fraction of VMEM_BYTES the estimate may claim
+F32 = 4
+
+# impl name -> vmem_bytes hook, lazily populated so importing this module
+# never forces the kernel imports (mirrors autotune.register_measure_kernel).
+_ESTIMATORS: Dict[str, Callable[..., int]] = {}
+
+
+def register_vmem_estimator(impl: str, fn: Callable[..., int]) -> None:
+    """Register ``impl``'s per-grid-step VMEM estimator (kernel modules call
+    this at import; ``fn(B=, block_k=, block_o=, q=, g=) -> bytes``)."""
+    _ESTIMATORS[impl] = fn
+
+
+def _ensure_loaded() -> None:
+    # the four in-tree kernels self-register on import; new formats register
+    # their own hooks from their kernel modules (DESIGN.md §10)
+    import repro.kernels.bcq_mm  # noqa: F401
+    import repro.kernels.dequant_mm  # noqa: F401
+    import repro.kernels.lutgemm  # noqa: F401
+    import repro.kernels.uniform_mm  # noqa: F401
+
+
+def known_impls():
+    _ensure_loaded()
+    return tuple(sorted(_ESTIMATORS))
+
+
+def vmem_bytes(impl: str, *, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
+    """Estimated per-grid-step VMEM bytes for ``impl``'s schedule.
+
+    Raises ``KeyError`` for impls with no registered estimator (callers that
+    merely *gate* — e.g. autotune table validation — treat unknown impls as
+    unpriceable and skip the budget check rather than guessing)."""
+    _ensure_loaded()
+    n = _ESTIMATORS[impl](B=B, block_k=block_k, block_o=block_o, q=q, g=g)
+    return int(n)
+
+
+def vmem_budget() -> int:
+    """Bytes one grid step may claim under the slack-adjusted VMEM budget."""
+    return int(VMEM_BYTES * VMEM_SLACK)
+
+
+def fits_budget(impl: str, *, B: int, block_k: int, block_o: int, q: int, g: int) -> bool:
+    return vmem_bytes(impl, B=B, block_k=block_k, block_o=block_o, q=q, g=g) <= vmem_budget()

@@ -6,8 +6,10 @@ Per k-block of the reduction dimension:
    length-``mu=8`` activation sub-vector against every sign pattern, computed as
    ONE small MXU matmul ``x_chunks (B·bk/8, 8) @ P^T (8, 256)`` — the TPU
    replacement for the GPU thread-block shared-memory fill. The LUT lives in
-   VMEM (v5e: ~128 MiB — the paper's shared-memory capacity argument holds with
-   ~3 orders of magnitude more headroom).
+   VMEM (~16 MB/core — the paper's shared-memory capacity argument holds with
+   ~2 orders of magnitude more headroom than a GPU SM's shared memory; the
+   per-grid-step budget is machine-checked via ``vmem_bytes`` below and
+   ``kernels/introspect.py``).
 2. **Retrieve** — packed weight bytes are the LUT keys; a vectorised
    ``take_along_axis`` replaces per-thread gathers. NOTE: this lowers to a
    dynamic-gather on TPU, which is VPU-serviced (no MXU) — the reason the
@@ -34,6 +36,27 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 128
 MU = 8
+
+
+def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
+    """Per-grid-step VMEM estimate (``kernels/introspect.py``): the bcq_mm
+    input/output pipeline plus this kernel's LUT table and the gathered
+    per-plane partial products — the terms that cap ``block_k`` differently
+    from the unpack kernel (the autotuner rationale)."""
+    C = block_k // MU
+    groups = max(block_k // g, 1)
+    io = 2 * (
+        B * block_k * 4  # x block, f32
+        + q * C * block_o  # packed block (LUT keys), uint8
+        + q * groups * block_o * 4  # scales block (<= f32)
+        + B * block_o * 4  # out block, f32
+    )
+    body = (
+        B * C * (1 << MU) * 4  # the LUT: all 2^mu partial dots per chunk
+        + B * q * C * block_o * 4  # gathered partial products
+        + B * block_o * 4  # acc scratch
+    )
+    return io + body
 
 
 def _sign_patterns(dtype) -> jax.Array:
@@ -137,3 +160,8 @@ def lutgemm(
         ),
         interpret=interpret,
     )(x, packed, scales)
+
+
+from repro.kernels.introspect import register_vmem_estimator  # noqa: E402
+
+register_vmem_estimator("lutgemm", vmem_bytes)

@@ -35,6 +35,7 @@ the historical single-format entry points, now thin shims over ``qmatmul``.
 
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -42,6 +43,35 @@ import jax.numpy as jnp
 
 from repro.core.qtensor import QuantizedTensor
 from repro.kernels.bcq_mm_fused import _split
+
+# How ``impl="auto"`` resolves, overridable per-scope via :func:`impl_mode`:
+#   None      — the format's own policy (Pallas on TPU, ref elsewhere);
+#   "deploy"  — the format's preferred Pallas kernel on EVERY backend
+#               (interpret-mode off-TPU). This is the program a TPU deployment
+#               actually runs; ``repro.analysis.staticcheck`` traces under it
+#               so the dtype-flow pass sees the real packed→kernel dataflow
+#               instead of the CPU ref oracle's legitimate dequantize;
+#   "ref"     — force the dequantize+dot oracle everywhere (numerics A/B).
+_IMPL_MODE: Optional[str] = None
+
+
+@contextlib.contextmanager
+def impl_mode(mode: Optional[str]):
+    """Scope an ``impl="auto"`` resolution override (``"deploy"``/``"ref"``).
+
+    Affects only call sites that left ``impl`` at ``"auto"`` — explicit impl
+    choices always win. Not thread-safe (module global), matching the
+    trace-time usage it exists for.
+    """
+    global _IMPL_MODE
+    if mode not in (None, "deploy", "ref"):
+        raise ValueError(f"impl_mode {mode!r}: expected None, 'deploy' or 'ref'")
+    prev = _IMPL_MODE
+    _IMPL_MODE = mode
+    try:
+        yield
+    finally:
+        _IMPL_MODE = prev
 
 
 def qmatmul(
@@ -70,6 +100,13 @@ def qmatmul(
     out_dims = (qt.o,) if out_dims is None else tuple(out_dims)
     if sum(out_dims) != qt.o:
         raise ValueError(f"out_dims {out_dims} do not sum to fused o={qt.o}")
+    if impl == "auto" and _IMPL_MODE is not None:
+        if _IMPL_MODE == "ref":
+            impl = "ref"
+        elif f.impls:  # "deploy": the format's preferred Pallas kernel
+            impl = f.impls[0]
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
     impl, interpret = f.resolve_impl(impl, interpret)
     out_dtype = out_dtype or x.dtype
 

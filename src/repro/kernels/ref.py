@@ -39,8 +39,8 @@ def lutgemm_tablewise_ref(
     q, kc, o = packed.shape
     k = kc * mu
     b = x.shape[0]
-    x = np.asarray(x, dtype=np.float64)
-    scales = np.asarray(scales, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)  # staticcheck: host-sync(f64 oracle computes on host by design)
+    scales = np.asarray(scales, dtype=np.float64)  # staticcheck: host-sync(f64 oracle computes on host by design)
 
     # all 2^mu sign patterns, LSB-first — pattern[key, j] = +1 if bit j of key set
     keys = np.arange(1 << mu)

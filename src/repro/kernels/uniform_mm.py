@@ -29,6 +29,25 @@ DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 256
 
 
+def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
+    """Per-grid-step VMEM estimate (``kernels/introspect.py``): bcq_mm's
+    pipeline shape with the (2, groups, bo) affine scale/zero block and the
+    unpacked bit planes + reassembled code block the body materialises."""
+    groups = max(block_k // g, 1)
+    io = 2 * (
+        B * block_k * 4  # x block, f32
+        + q * (block_k // 8) * block_o  # packed bit planes, uint8
+        + 2 * groups * block_o * 4  # (scale, zero) block (<= f32)
+        + B * block_o * 4  # out block, f32
+    )
+    body = (
+        q * block_k * block_o * 4  # unpacked bit planes
+        + 2 * block_k * block_o * 4  # reassembled codes + affine w_eff
+        + B * block_o * 4  # acc scratch
+    )
+    return io + body
+
+
 def _unpack_codes_block(packed: jax.Array, compute_dtype) -> jax.Array:
     """uint8 (q, bk/8, bo) bit planes → codes (bk, bo) in compute_dtype."""
     q, kc, bo = packed.shape
@@ -154,3 +173,8 @@ def uniform_mm(
         interpret=interpret,
         compute_dtype=compute_dtype,
     )
+
+
+from repro.kernels.introspect import register_vmem_estimator  # noqa: E402
+
+register_vmem_estimator("uniform_mm", vmem_bytes)

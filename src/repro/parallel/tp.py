@@ -200,7 +200,7 @@ def _interleave_perm(out_dims: Sequence[int], n: int) -> np.ndarray:
         for st, d in zip(starts, out_dims):
             loc = d // n
             idx.extend(range(st + dev * loc, st + (dev + 1) * loc))
-    return np.asarray(idx, np.int64)
+    return np.asarray(idx, np.int64)  # staticcheck: host-sync(host-built permutation index, no device values)
 
 
 def _permute_cols(leaf, out_dims: Tuple[int, ...], n: int, where: str):

@@ -1,0 +1,174 @@
+"""Units for analysis/roofline.py and analysis/report.py (satellite of the
+static-checker PR: these modules feed EXPERIMENTS.md and were untested)."""
+
+import json
+
+import pytest
+
+import importlib
+
+from repro.analysis import report
+
+# the module, not the same-named function the package re-exports
+roofline = importlib.import_module("repro.analysis.roofline")
+
+
+# ---------------------------------------------------------------------------
+# roofline model
+# ---------------------------------------------------------------------------
+
+
+def test_hw_constants_are_v5e():
+    assert roofline.V5E.peak_flops == 197e12
+    assert roofline.V5E.hbm_bw == 819e9
+    assert roofline.V5E.ici_bw == 50e9
+
+
+def test_roofline_terms_and_dominant():
+    r = roofline.roofline(197e12, 819e9, 25e9, chips=4)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.bound_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory")
+
+    r = roofline.roofline(1e12, 819e9 * 3, 0.0, chips=1)
+    assert r.dominant == "memory"
+    assert r.bound_s == pytest.approx(3.0)
+
+    r = roofline.roofline(0.0, 0.0, 100e9, chips=1)
+    assert r.dominant == "collective"
+    assert r.bound_s == pytest.approx(2.0)
+
+
+def test_roofline_model_flops_ratios():
+    # 2 chips each doing 10 TFLOP; model needs 10 TFLOP total → half the HLO
+    # FLOPs are overhead (remat/dequant/redundancy)
+    r = roofline.roofline(10e12, 0.0, 0.0, chips=2, model_flops=10e12)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    # mfu_bound = model / (chips * peak * bound_s)
+    expect = 10e12 / (2 * 197e12 * r.bound_s)
+    assert r.mfu_bound == pytest.approx(expect)
+
+    r = roofline.roofline(10e12, 0.0, 0.0, chips=2)
+    assert r.useful_flops_ratio is None and r.mfu_bound is None
+
+    d = roofline.roofline(1.0, 2.0, 3.0, chips=1).to_dict()
+    assert d["dominant"] == "collective"
+    assert set(d) >= {"compute_s", "memory_s", "collective_s", "bound_s",
+                      "mfu_bound", "useful_flops_ratio", "chips"}
+    json.dumps(d)  # the dict must stay JSON-serialisable (cell files)
+
+
+def test_model_flops_estimate():
+    assert roofline.model_flops_estimate(1000, 10, training=True) == 60000.0
+    assert roofline.model_flops_estimate(1000, 10, training=False) == 20000.0
+
+
+# ---------------------------------------------------------------------------
+# report formatting helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fmt_s():
+    assert report._fmt_s(2.5) == "2.50s"
+    assert report._fmt_s(1.0) == "1.00s"
+    assert report._fmt_s(0.0123) == "12.3ms"
+    assert report._fmt_s(1e-3) == "1.0ms"
+    assert report._fmt_s(42e-6) == "42µs"
+
+
+def test_fmt_b():
+    assert report._fmt_b(2.5e12) == "2.5TB"
+    assert report._fmt_b(3.2e9) == "3.2GB"
+    assert report._fmt_b(1.5e6) == "1.5MB"
+    assert report._fmt_b(2e3) == "2.0KB"
+    assert report._fmt_b(512) == "512B"
+
+
+# ---------------------------------------------------------------------------
+# table rendering over synthetic cells
+# ---------------------------------------------------------------------------
+
+
+def _cell(arch="llama3.2-3b", shape="decode_32k", mesh="single", q=0, kind="decode"):
+    r = roofline.roofline(
+        5e12, 100e9, 10e9, chips=4, model_flops=4e12
+    )
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "quant_q": q,
+        "chips": 4,
+        "compile_s": 12.0,
+        "meta": {"kind": kind, "weight_uses": 1},
+        "roofline": r.to_dict(),
+        "memory_analysis": {"argument_size": 3e9, "temp_size": 1e9},
+        "trip_aware": {
+            "collectives": {
+                name: {"bytes": 1e6, "count": 2}
+                for name in ("all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute")
+            }
+        },
+    }
+
+
+def test_load_cells(tmp_path):
+    for i, cell in enumerate([_cell(), _cell(q=3)]):
+        (tmp_path / f"c{i}.json").write_text(json.dumps(cell))
+    (tmp_path / "ignore.txt").write_text("not a cell")
+    cells = load = report.load_cells(str(tmp_path))
+    assert len(cells) == 2
+    assert {c["quant_q"] for c in load} == {0, 3}
+
+
+def test_roofline_table_renders():
+    cells = [_cell(), _cell(q=3), _cell(mesh="multi")]
+    md = report.roofline_table(cells, "single")
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch |")
+    assert len(lines) == 2 + 2  # header + separator + 2 single-mesh rows
+    assert "bf16" in lines[2] and "| 3 |" in lines[3]
+    # every row has the same column count as the header
+    ncols = lines[0].count("|")
+    assert all(l.count("|") == ncols for l in lines[2:])
+
+
+def test_dryrun_table_renders():
+    md = report.dryrun_table([_cell(), _cell(shape="prefill_32k")])
+    lines = md.splitlines()
+    assert len(lines) == 4
+    # prefill sorts before decode (shape order), both show byte columns
+    assert "prefill_32k" in lines[2] and "decode_32k" in lines[3]
+    assert "1.0MB" in lines[2]
+
+
+def test_bottleneck_summary():
+    md = report.bottleneck_summary([_cell(), _cell(mesh="multi")])
+    lines = md.splitlines()
+    assert len(lines) == 1  # multi-mesh cells excluded
+    assert "llama3.2-3b × decode_32k" in lines[0]
+    assert "-bound at" in lines[0]
+
+
+def test_weight_bytes_per_chip_quantized_smaller():
+    dense = report.weight_bytes_per_chip("llama3.2-3b", 0)
+    q3 = report.weight_bytes_per_chip("llama3.2-3b", 3)
+    assert 0 < q3 < dense
+    # 3-bit packed planes + group scales vs bf16 (embeddings stay dense):
+    # comfortably under half the bf16 footprint
+    assert q3 < dense / 2
+
+
+def test_kernel_adjusted_memory_differences_dense_sibling():
+    dense = _cell(arch="llama3.2-3b", q=0)
+    quant = _cell(arch="llama3.2-3b", q=3)
+    adj = report.kernel_adjusted_memory([dense, quant])
+    key = ("llama3.2-3b", "decode_32k", "single", 3)
+    assert set(adj) == {key}
+    # adjusted bytes = dense_bytes - w_dense + w_packed < dense_bytes
+    assert 0 < adj[key] < dense["roofline"]["bytes_per_chip"] / 819e9
+    # no dense sibling → no adjustment
+    assert report.kernel_adjusted_memory([quant]) == {}
