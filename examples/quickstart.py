@@ -65,6 +65,22 @@ request's tokens stay bit-identical to an undisturbed run::
                 if ev.kind == "tokens" and boring(ev.tokens):
                     stream.cancel("lost interest")   # slot reclaimed next chunk
     asyncio.run(demo())
+
+Everything above is observable (DESIGN.md §11): attach `repro.obs`'s span
+tracer + metrics registry to any scheduler and serving stays bit-identical
+while every request lifecycle, decode chunk and kernel dispatch is recorded
+— `--trace-out t.json` on the serve CLI dumps a Chrome/Perfetto trace,
+`--profile-dir d/` wraps the run in a ``jax.profiler.trace`` capture, the
+WebSocket server exposes ``/v1/metrics?format=prometheus`` and
+``/v1/trace``, and ``python -m repro.obs.trace --out t.json`` captures a
+self-contained fault-injected demo serve::
+
+    from repro.obs import MetricsRegistry, Tracer
+    tracer, registry = Tracer(), MetricsRegistry()
+    sched = Scheduler(eng, n_slots=4, tracer=tracer, metrics=registry)
+    ...
+    json.dump(tracer.to_chrome(), open("t.json", "w"))  # ui.perfetto.dev
+    print(registry.snapshot()["serve_ttft_seconds"])    # p50/p95/p99
 """
 
 import jax.numpy as jnp

@@ -68,9 +68,9 @@ def streaming_demo(engine, prompts, gen):
                     break
             _, vlast = await victim.drain()
             toks, _ = await keep.drain()
-            return toks, vlast, sess.metrics()
+            return toks, vlast, sess.metrics(), sess.trace_json()
 
-    toks, vlast, m = asyncio.run(demo())
+    toks, vlast, m, trace = asyncio.run(demo())
     assert np.array_equal(
         np.asarray(toks), solo.tokens[0, prompts.shape[1]:]
     ), "survivor of a mid-flight cancel must stay token-identical to solo"
@@ -80,6 +80,39 @@ def streaming_demo(engine, prompts, gen):
         f"(token-identical to solo) while neighbour was {vlast.status} "
         f"mid-flight ({vlast.reason!r}); ttft p50/p95 = "
         f"{ttft['p50'] * 1e3:.0f}/{ttft['p95'] * 1e3:.0f} ms"
+    )
+
+    # the same run left a full span trace behind (DESIGN.md §11): sessions
+    # observe by default, so the lifecycle of BOTH requests — including the
+    # mid-flight cancel — is already recorded. Dump it, check it is a valid
+    # Chrome trace, and read the story back out of the request lanes.
+    import json
+    import os
+    import tempfile
+
+    from repro.obs import validate_chrome_trace
+
+    validate_chrome_trace(trace)
+    path = os.path.join(tempfile.gettempdir(), "serve_quantized_trace.json")
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    lanes = {}
+    for ev in trace["traceEvents"]:
+        if ev["ph"] in ("X", "i"):
+            lanes.setdefault(ev["tid"], []).append(ev["name"])
+    req_lanes = {
+        tid: names for tid, names in lanes.items()
+        if any(n in ("finished", "cancelled") for n in names)
+    }
+    terminals = sorted(
+        names[-1] for names in req_lanes.values()
+    )  # each request lane ends in exactly one terminal instant
+    assert terminals == ["cancelled", "finished"], terminals
+    print(
+        f"trace       : {len(trace['traceEvents'])} events across "
+        f"{len(lanes)} lanes -> {path} (open in ui.perfetto.dev); "
+        f"request lanes end in {terminals}; metrics snapshot has "
+        f"{len(m['registry'])} series families"
     )
 
 

@@ -26,7 +26,7 @@ Passes (one module each):
   budget (``kernels/introspect.py``);
 - :mod:`~repro.analysis.staticcheck.lint`      — AST rules for the host/device
   boundary (``.item()``, undeclared host syncs, raw ``shard_map`` imports,
-  bare ``jax.jit``).
+  bare ``jax.jit``, and the ``repro.obs`` host-only import rule).
 
 All jaxpr passes trace on :class:`jax.ShapeDtypeStruct` trees — full-size
 registered configs check in seconds with zero weight memory.

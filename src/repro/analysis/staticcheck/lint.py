@@ -21,11 +21,19 @@ paid for (DESIGN.md §10):
   modules: nearly every jit here needs ``static_argnames`` or
   ``donate_argnums``; a bare one is usually an unconsidered default.
   Intentional ones declare ``# staticcheck: jit-ok(reason)``.
+- ``obs-host-only`` — ``repro/obs`` is the host-side observability layer
+  (DESIGN.md §11): its modules may not import jax or the jitted
+  kernel/model packages at module level. The dependency edge must point
+  instrumented-code → obs, never back — otherwise the tracer could reach
+  device state and the "instrumentation is bit-identical and adds no
+  compile-cache entries" guarantee (tests/test_obs.py) stops being
+  structural. Function-local imports (the CLI demo building an Engine)
+  are allowed: they run only when a demo/CLI entry point is invoked.
 
 Scope: ``infer/``, ``kernels/``, ``models/``, ``parallel/`` under
 ``src/repro`` (the serving hot path); ``raw-shard-map`` scans all of
-``src/repro``. Tests/benchmarks/launch scripts are host programs and out
-of scope by design.
+``src/repro``; ``obs-host-only`` scans ``obs/``. Tests/benchmarks/launch
+scripts are host programs and out of scope by design.
 """
 
 from __future__ import annotations
@@ -75,11 +83,18 @@ def lint_source(source: str, relpath: str) -> List[Violation]:
         return [Violation("lint", f"{relpath}:{e.lineno}", f"unparseable: {e.msg}")]
     pragmas = _pragmas_by_line(source)
     in_hot = any(f"/{d}/" in f"/{relpath}" or relpath.startswith(f"{d}/") for d in HOT_DIRS)
+    in_obs = "/obs/" in f"/{relpath}" or relpath.startswith("obs/")
     is_compat_seam = relpath.endswith("parallel/compat.py") or relpath == "parallel/compat.py"
     out: List[Violation] = []
 
     def has(line: int, tag: str) -> bool:
         return tag in pragmas.get(line, ())
+
+    if in_obs:
+        # obs-host-only: only MODULE-LEVEL imports (tree.body, plus
+        # module-level try/if blocks) — function-local imports are the
+        # sanctioned lazy pattern for CLI demos
+        out.extend(_obs_host_only(tree, relpath))
 
     for node in ast.walk(tree):
         # raw-shard-map: applies everywhere except the compat seam
@@ -152,6 +167,67 @@ def lint_source(source: str, relpath: str) -> List[Violation]:
                     "donate_argnums, or declare `# staticcheck: jit-ok(reason)`",
                 )
             )
+    return out
+
+
+# import roots forbidden at module level inside repro/obs: jax itself and
+# every package whose modules import jax at module level (the jitted stack)
+_OBS_FORBIDDEN = (
+    "jax",
+    "repro.kernels",
+    "repro.models",
+    "repro.parallel",
+    "repro.infer",
+    "repro.quant",
+    "repro.core",
+)
+
+
+def _module_level_nodes(tree: ast.Module):
+    """Module-scope statements, descending through module-level try/if/with
+    blocks (the optional-dependency idiom) but never into function or class
+    bodies — imports there execute lazily and are allowed."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.Try, ast.If, ast.With)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                for child in getattr(node, field, []):
+                    stack.append(
+                        child.body if isinstance(child, ast.ExceptHandler) else child
+                    )
+        # flatten except-handler bodies pushed as lists above
+        if stack and isinstance(stack[-1], list):
+            stack.extend(stack.pop())
+
+
+def _obs_host_only(tree: ast.Module, relpath: str) -> List[Violation]:
+    out: List[Violation] = []
+
+    def check(modname: Optional[str], lineno: int) -> None:
+        if modname is None:
+            return
+        if any(
+            modname == root or modname.startswith(root + ".")
+            for root in _OBS_FORBIDDEN
+        ):
+            out.append(
+                Violation(
+                    "lint/obs-host-only", f"{relpath}:{lineno}",
+                    f"repro.obs is host-side-only: module-level import of "
+                    f"{modname!r} pulls the jitted stack (or jax) into the "
+                    f"observability layer — import it inside the function "
+                    f"that needs it (CLI/demo entry points only)",
+                )
+            )
+
+    for node in _module_level_nodes(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                check(a.name, node.lineno)
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            check(node.module, node.lineno)
     return out
 
 

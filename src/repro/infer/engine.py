@@ -36,6 +36,7 @@ is the escape hatch.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Optional
@@ -108,6 +109,7 @@ class Engine:
         embed_fn=None,
         fuse: bool = True,
         mesh=None,
+        tracer=None,
     ):
         """``embed_fn(tokens (B,1) int32) → (B,1,D)`` is required for
         embedding-input (modality-stub) models to feed sampled codes back in —
@@ -121,8 +123,19 @@ class Engine:
         (DESIGN.md §7): weights are placed column/row-parallel, KV caches
         shard their kv-head dim, and all decode/serve/speculative paths
         consume the shards; tokens are identical to the single-device engine
-        for greedy decoding, logits equal up to psum reassociation."""
+        for greedy decoding, logits equal up to psum reassociation.
+
+        ``tracer`` (a :class:`repro.obs.trace.Tracer`) records host-side
+        spans around every engine dispatch on the ``engine`` lane. Spans
+        wrap the *host* call — dispatch plus any blocking fetch the caller's
+        path performs inside them — never code inside a jitted function, so
+        instrumentation changes neither the traced programs (§3 trace-once)
+        nor the tokens (tests/test_obs.py). Per-op device timing needs a
+        ``jax.profiler.trace`` capture (``launch/serve.py --profile-dir``);
+        the :func:`jax.profiler.TraceAnnotation` scopes emitted here label
+        those captures."""
         self.cfg = cfg
+        self.tracer = tracer
         self.params = fuse_decode_projections(cfg, params) if fuse else params
         self.max_seq = max_seq
         self.embed_fn = embed_fn
@@ -457,6 +470,21 @@ class Engine:
         self._draft_params: dict = {}  # q_draft -> truncated param tree
         self._slot_spec: Optional[SpecConfig] = None  # set by init_slots
 
+    def _obs_scope(self, name: str, **args):
+        """Host-side observability scope around one engine dispatch: a tracer
+        span on the ``engine`` lane (when a tracer is attached and enabled)
+        plus a ``jax.profiler.TraceAnnotation`` so the region is labelled in
+        ``jax.profiler.trace`` captures. Entered strictly outside jitted
+        code; a TraceAnnotation with no active profiler session is a cheap
+        no-op, and a disabled/absent tracer never reads a clock."""
+        ctx = contextlib.ExitStack()
+        if self.tracer is not None and self.tracer.enabled:
+            ctx.enter_context(
+                self.tracer.span(name, cat="engine", lane="engine", **args)
+            )
+        ctx.enter_context(jax.profiler.TraceAnnotation(name))
+        return ctx
+
     def _make_cache(self, batch: int):
         """A fresh decode cache, TP-sharded (kv-heads over `model`) when the
         engine runs on a mesh so the jitted paths see sharded inputs instead
@@ -612,7 +640,10 @@ class Engine:
             # functional (no donation), so the template is reusable and the
             # admission hot path skips a full max_seq cache alloc+zero
             self._unit_cache = self._make_cache(1)
-        logits, cache1 = self._prefill(self.params, prompt, None, self._unit_cache)
+        with self._obs_scope("engine/prefill", prompt_len=plen, slot=slot):
+            logits, cache1 = self._prefill(
+                self.params, prompt, None, self._unit_cache
+            )
         greedy = temperature <= 0
         args = (
             jnp.int32(plen),
@@ -621,18 +652,24 @@ class Engine:
             jnp.bool_(greedy),
         )
         if spec is None:
-            return self._admit(
-                slots, jnp.int32(slot), cache1, logits[:, -1],
-                jax.random.PRNGKey(seed), *args,
+            with self._obs_scope("engine/admit", slot=slot):
+                return self._admit(
+                    slots, jnp.int32(slot), cache1, logits[:, -1],
+                    jax.random.PRNGKey(seed), *args,
+                )
+        with self._obs_scope(
+            "engine/prefill_draft", prompt_len=plen, slot=slot,
+            q_draft=spec.q_draft,
+        ):
+            _, dcache1 = self._prefill(
+                self.draft_params(spec.q_draft), prompt, None, self._unit_cache
             )
-        _, dcache1 = self._prefill(
-            self.draft_params(spec.q_draft), prompt, None, self._unit_cache
-        )
-        return self._admit_spec(
-            slots, jnp.int32(slot), cache1, dcache1, logits[:, -1],
-            jax.random.PRNGKey(seed), jax.random.PRNGKey(seed ^ 0x5BEC),
-            *args, jnp.bool_(speculate),
-        )
+        with self._obs_scope("engine/admit", slot=slot, spec=True):
+            return self._admit_spec(
+                slots, jnp.int32(slot), cache1, dcache1, logits[:, -1],
+                jax.random.PRNGKey(seed), jax.random.PRNGKey(seed ^ 0x5BEC),
+                *args, jnp.bool_(speculate),
+            )
 
     def decode_slots(self, slots: dict, n_steps: int):
         """Run `n_steps` decode steps over the whole slot batch.
@@ -640,7 +677,8 @@ class Engine:
         Returns `(tokens (B, n_steps) int32, active (B, n_steps) bool,
         new_slots)`; `tokens[b, t]` is a real emission iff `active[b, t]`.
         """
-        return self._scan_decode_slots(self.params, slots, n_steps=n_steps)
+        with self._obs_scope("engine/scan_decode", n_steps=n_steps):
+            return self._scan_decode_slots(self.params, slots, n_steps=n_steps)
 
     def spec_decode_slots(self, slots: dict, n_chunks: int):
         """Run `n_chunks` speculative chunks over the whole slot batch.
@@ -652,10 +690,13 @@ class Engine:
         spec = self._slot_spec
         if spec is None or "draft_cache" not in slots:
             raise ValueError("slots were not initialised with speculate=...")
-        return self._scan_spec_slots(
-            self.params, self.draft_params(spec.q_draft), slots,
-            n_chunks=n_chunks, gamma=spec.gamma,
-        )
+        with self._obs_scope(
+            "engine/spec_chunks", n_chunks=n_chunks, gamma=spec.gamma
+        ):
+            return self._scan_spec_slots(
+                self.params, self.draft_params(spec.q_draft), slots,
+                n_chunks=n_chunks, gamma=spec.gamma,
+            )
 
     def release_slot(self, slots: dict, slot: int) -> dict:
         """Reclaim one slot at a chunk boundary (cancel/timeout/quarantine):
@@ -738,9 +779,10 @@ class Engine:
                     f"garbage embedding rows device-side"
                 )
         cache = self._make_cache(b)
-        logits, cache = self._prefill(
-            self.params, jnp.asarray(prompt_tokens), image_emb, cache
-        )
+        with self._obs_scope("engine/prefill", prompt_len=s, batch=b):
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(prompt_tokens), image_emb, cache
+            )
         key = jax.random.PRNGKey(seed)
         greedy = temperature <= 0
 
@@ -762,16 +804,23 @@ class Engine:
                 )
             draft = self.draft_params(speculate.q_draft)
             dcache = self._make_cache(b)
-            _, dcache = self._prefill(
-                draft, jnp.asarray(prompt_tokens), image_emb, dcache
-            )
-            toks, (acc, prop, chunks) = self._spec_generate(
-                self.params, draft, logits[:, -1], cache, dcache,
-                jnp.full((b,), s, jnp.int32), key,
-                jax.random.PRNGKey(seed ^ 0x5BEC),
-                jnp.float32(temperature if not greedy else 1.0),
-                n_steps=n_steps, gamma=speculate.gamma, greedy=greedy,
-            )
+            with self._obs_scope(
+                "engine/prefill_draft", prompt_len=s, batch=b,
+                q_draft=speculate.q_draft,
+            ):
+                _, dcache = self._prefill(
+                    draft, jnp.asarray(prompt_tokens), image_emb, dcache
+                )
+            with self._obs_scope(
+                "engine/spec_generate", n_steps=n_steps, gamma=speculate.gamma
+            ):
+                toks, (acc, prop, chunks) = self._spec_generate(
+                    self.params, draft, logits[:, -1], cache, dcache,
+                    jnp.full((b,), s, jnp.int32), key,
+                    jax.random.PRNGKey(seed ^ 0x5BEC),
+                    jnp.float32(temperature if not greedy else 1.0),
+                    n_steps=n_steps, gamma=speculate.gamma, greedy=greedy,
+                )
             tokens = np.concatenate(
                 [np.asarray(prompt_tokens), np.asarray(toks)], axis=1  # staticcheck: host-sync(one fetch for the whole speculative generation)
             )
@@ -789,16 +838,17 @@ class Engine:
             )
 
         if scan and cfg.input_kind == "tokens":
-            toks, _ = self._scan_decode(
-                self.params,
-                logits[:, -1],
-                cache,
-                jnp.int32(s),
-                key,
-                jnp.float32(temperature if not greedy else 1.0),
-                n_steps=n_steps,
-                greedy=greedy,
-            )
+            with self._obs_scope("engine/scan_decode", n_steps=n_steps, batch=b):
+                toks, _ = self._scan_decode(
+                    self.params,
+                    logits[:, -1],
+                    cache,
+                    jnp.int32(s),
+                    key,
+                    jnp.float32(temperature if not greedy else 1.0),
+                    n_steps=n_steps,
+                    greedy=greedy,
+                )
             tokens = np.concatenate([np.asarray(prompt_tokens), np.asarray(toks)], axis=1)  # staticcheck: host-sync(one fetch for the whole scanned decode)
             return _result(tokens)
 

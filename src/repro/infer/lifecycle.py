@@ -147,16 +147,28 @@ class RequestLifecycle:
         return (self.finished_at - self.first_token_at) / (self.n_tokens - 1)
 
 
-def _pcts(values: List[float]) -> Optional[Dict[str, float]]:
-    if not values:
-        return None
-    v = np.asarray(values, np.float64)  # staticcheck: host-sync(latency stats over host floats)
+def _pcts(values: List[Optional[float]]) -> Dict[str, Optional[float]]:
+    """Percentile block over the *finite* values. Always a dict — an empty
+    or all-excluded stream yields explicit nulls with ``n == 0`` (never
+    ``None`` in place of the block, never a NaN percentile), so consumers
+    can subscript unconditionally and nulls survive JSON round-trips.
+    ``excluded`` counts what was dropped (None entries from requests that
+    never produced the measurement, plus any non-finite values)."""
+    finite = [v for v in values if v is not None and np.isfinite(v)]  # staticcheck: host-sync(latency stats over host floats)
+    excluded = len(values) - len(finite)
+    if not finite:
+        return {
+            "p50": None, "p95": None, "p99": None, "mean": None,
+            "n": 0, "excluded": excluded,
+        }
+    v = np.asarray(finite, np.float64)  # staticcheck: host-sync(latency stats over host floats)
     return {
         "p50": float(np.percentile(v, 50)),  # staticcheck: host-sync(host stats)
         "p95": float(np.percentile(v, 95)),  # staticcheck: host-sync(host stats)
         "p99": float(np.percentile(v, 99)),  # staticcheck: host-sync(host stats)
         "mean": float(v.mean()),  # staticcheck: host-sync(host stats)
-        "n": len(values),
+        "n": len(finite),
+        "excluded": excluded,
     }
 
 
@@ -167,6 +179,13 @@ def latency_summary(records: Iterable[RequestLifecycle]) -> dict:
     visible to the host when a decode chunk returns), so ``chunk=1`` gives
     exact per-token latencies and larger chunks overstate TTFT by at most
     one chunk's wall time — the same resolution a streaming client observes.
+
+    Edge cases are explicit, never NaN: with zero finished requests the
+    ``ttft_s``/``tpot_s`` blocks still exist with null percentiles and
+    ``n == 0``; a single-token completion has no TPOT (``tpot_s`` counts it
+    under ``excluded``); requests that never reached a first token are
+    tallied in ``no_first_token`` instead of silently vanishing from the
+    percentile population.
     """
     records = list(records)
     by_state: Dict[str, int] = {}
@@ -176,6 +195,14 @@ def latency_summary(records: Iterable[RequestLifecycle]) -> dict:
     return {
         "requests": len(records),
         "by_state": by_state,
-        "ttft_s": _pcts([r.ttft for r in fin if r.ttft is not None]),
-        "tpot_s": _pcts([r.tpot for r in fin if r.tpot is not None]),
+        "finished": len(fin),
+        # terminal without ever emitting: cancelled/timed-out/failed before
+        # the first chunk returned (a FINISHED request always has one)
+        "no_first_token": sum(
+            1
+            for r in records
+            if r.state.terminal and r.first_token_at is None
+        ),
+        "ttft_s": _pcts([r.ttft for r in fin]),
+        "tpot_s": _pcts([r.tpot for r in fin]),
     }

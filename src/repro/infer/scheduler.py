@@ -233,6 +233,21 @@ class Scheduler:
       boundary with the request's newly visible (post-truncation) tokens.
     - ``on_event(record)``: fired at every terminal transition with the
       request's :class:`RequestLifecycle` (partial tokens attached).
+    - ``tracer``: an optional :class:`repro.obs.trace.Tracer`. Lifecycle
+      spans (queued/prefill/decode per request) are replayed from the
+      record's *stored* timestamps at the terminal transition — tracing
+      consumes zero extra scheduler-clock readings, so StepClock-driven
+      deadline behaviour is untouched. Per-chunk spans read the tracer's
+      own clock (``time.monotonic`` unless injected), a separate timebase
+      by design (DESIGN.md §11).
+    - ``metrics``: an optional :class:`repro.obs.metrics.MetricsRegistry`.
+      Every ``counters`` increment goes through one helper that also bumps
+      the registry's ``serve_<key>_total`` series, so the exported metrics
+      agree with :meth:`summary` by construction, plus queue-depth /
+      slot-occupancy gauges and TTFT/TPOT/e2e histograms.
+
+    Both hooks observe strictly *between* engine dispatches; instrumented
+    serving is bit-identical to uninstrumented (tests/test_obs.py).
 
     Threading: the scheduler itself is single-threaded — drive ``submit``/
     ``step``/``run`` from one thread (the async server pumps it from a
@@ -257,6 +272,8 @@ class Scheduler:
         sleep: Callable[[float], None] = time.sleep,
         on_tokens: Optional[Callable[[int, List[int]], None]] = None,
         on_event: Optional[Callable[[RequestLifecycle], None]] = None,
+        tracer=None,
+        metrics=None,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
@@ -301,6 +318,88 @@ class Scheduler:
         self._chunk_ordinal = 0  # decode dispatches over the lifetime
         self._rid_counter = itertools.count()
         self._used_rids = set()  # rids ever seen by THIS scheduler
+        self.tracer = tracer
+        self.metrics = metrics
+        if metrics is not None:
+            metrics.gauge(
+                "serve_slot_capacity", "configured decode-batch slots"
+            ).set(n_slots)
+            # pre-register the zero-valued series so a scrape before traffic
+            # (and the counters_agree check) sees every family
+            for key in self.counters:
+                metrics.counter(
+                    f"serve_{key}_total", f"requests/events: {key}"
+                )
+            metrics.counter("serve_submitted_total",
+                            "submit() calls incl. queue-full rejections")
+            metrics.counter("serve_finished_total",
+                            "requests that reached FINISHED")
+            metrics.counter("serve_tokens_total", "committed output tokens")
+            metrics.counter("serve_decode_chunks_total",
+                            "decode/speculative chunk dispatches")
+
+    def _count(self, key: str, n: int = 1) -> None:
+        """The one place ``counters`` increments happen: keeps the host-side
+        dict and the exported ``serve_<key>_total`` series in lockstep."""
+        self.counters[key] += n
+        if self.metrics is not None:
+            self.metrics.counter(f"serve_{key}_total").inc(n)
+
+    def _observe_gauges(self) -> None:
+        if self.metrics is None:
+            return
+        active = self.n_active
+        self.metrics.gauge(
+            "serve_queue_depth", "requests waiting for admission"
+        ).set(len(self.queue))
+        self.metrics.gauge(
+            "serve_active_slots", "slots with a live tenant"
+        ).set(active)
+        self.metrics.gauge(
+            "serve_batch_efficiency",
+            "active slots / capacity at the last chunk boundary",
+        ).set(active / self.n_slots)
+        if self.speculate is not None and self.chunk_rows:
+            self.metrics.gauge(
+                "serve_spec_accept_rate",
+                "estimated draft-token acceptance rate",
+            ).set(self.spec_accept_rate)
+
+    def _trace_lifecycle(self, rec: RequestLifecycle) -> None:
+        """Replay one finished record as spans on its ``req:<rid>`` lane —
+        all timestamps come from the record (taken by the scheduler clock as
+        part of normal lifecycle bookkeeping), so tracing adds no readings."""
+        lane = f"req:{rec.rid}"
+        # phase spans: QUEUED from submit to the first transition, then each
+        # history entry runs to the next (the terminal entry has zero width
+        # and is emitted as an instant with the reason attached)
+        t_prev, name_prev = rec.submitted_at, "queued"
+        for state, at in rec.history:
+            self.tracer.complete(name_prev, t_prev, at, cat="lifecycle",
+                                 lane=lane, args={"rid": rec.rid})
+            t_prev, name_prev = at, state.value
+        self.tracer.instant(
+            rec.state.value, ts=rec.finished_at, cat="lifecycle", lane=lane,
+            args={"rid": rec.rid, "reason": rec.reason,
+                  "n_tokens": rec.n_tokens},
+        )
+
+    def _observe_latency(self, rec: RequestLifecycle) -> None:
+        """Terminal-time latency histograms (each record reaches a terminal
+        state exactly once — terminal states are terminal — so these observe
+        once per request)."""
+        if rec.ttft is not None:
+            self.metrics.histogram(
+                "serve_ttft_seconds", "submit -> first token"
+            ).observe(rec.ttft)
+        if rec.tpot is not None:
+            self.metrics.histogram(
+                "serve_tpot_seconds", "mean time per token after the first"
+            ).observe(rec.tpot)
+        if rec.finished_at is not None:
+            self.metrics.histogram(
+                "serve_e2e_seconds", "submit -> terminal state"
+            ).observe(rec.finished_at - rec.submitted_at)
 
     # -- queue ---------------------------------------------------------------
 
@@ -320,11 +419,23 @@ class Scheduler:
                 f"[{req.prompt.min()}, {req.prompt.max()}] — out-of-range ids "
                 f"index garbage embedding rows device-side"
             )
+        if self.metrics is not None:
+            # counted after validation, before the queue-full check: the
+            # accounting invariant is finished + cancelled + timed_out + shed
+            # + failed + rejected_queue_full == submitted, with rejections on
+            # both sides (a ValueError above is a malformed call, not a
+            # request)
+            self.metrics.counter("serve_submitted_total").inc()
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             # loud reject-with-reason backpressure: the caller (or the async
             # server, which turns this into a per-client rejection) decides
             # whether to retry — the queue never grows without bound
-            self.counters["rejected_queue_full"] += 1
+            self._count("rejected_queue_full")
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "reject_queue_full", cat="admission", lane="scheduler",
+                    args={"queued": len(self.queue)},
+                )
             raise QueueFullError(
                 f"admission queue full ({self.max_queue} waiting): request "
                 f"rejected — resubmit later, shrink the burst, or raise "
@@ -343,10 +454,18 @@ class Scheduler:
                 "Request or an explicit unique rid)"
             )
         self._used_rids.add(req.rid)
-        self.outcomes[req.rid] = RequestLifecycle(
-            rid=req.rid, submitted_at=self._clock()
-        )
+        rec = RequestLifecycle(rid=req.rid, submitted_at=self._clock())
+        self.outcomes[req.rid] = rec
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "submit", ts=rec.submitted_at, cat="lifecycle",
+                lane=f"req:{req.rid}",
+                args={"rid": req.rid, "prompt_len": plen,
+                      "max_new_tokens": req.max_new_tokens},
+            )
+        if self.metrics is not None:
+            self._observe_gauges()
         return req.rid
 
     def cancel(self, rid: int, reason: str = "cancelled by client") -> bool:
@@ -398,6 +517,10 @@ class Scheduler:
         rec.transition(state, self._clock(), reason)
         rec.new_tokens = np.asarray(tokens or [], np.int32)  # staticcheck: host-sync(tokens already host-side)
         rec.n_tokens = int(rec.new_tokens.size)
+        if self.tracer is not None:
+            self._trace_lifecycle(rec)
+        if self.metrics is not None:
+            self._observe_latency(rec)
         if self.on_event is not None:
             self.on_event(rec)
 
@@ -424,7 +547,7 @@ class Scheduler:
             if reason is None:
                 keep.append(req)
             else:
-                self.counters["cancelled"] += 1
+                self._count("cancelled")
                 self._terminal(
                     self.outcomes[req.rid], RequestState.CANCELLED, reason
                 )
@@ -434,7 +557,7 @@ class Scheduler:
                 continue
             reason = self._pending_cancel.pop(tenant.req.rid, None)
             if reason is not None:
-                self.counters["cancelled"] += 1
+                self._count("cancelled")
                 self._evict(slot, RequestState.CANCELLED, reason)
         self._pending_cancel.clear()  # unknown/raced rids: nothing to do
 
@@ -460,7 +583,7 @@ class Scheduler:
             if expired is None:
                 keep.append(req)
             else:
-                self.counters["shed"] += 1
+                self._count("shed")
                 self._terminal(rec, RequestState.SHED, expired)
         self.queue = keep
         for slot, tenant in enumerate(self._tenants):
@@ -470,7 +593,7 @@ class Scheduler:
             rec = self.outcomes[req.rid]
             age = now - rec.submitted_at
             if req.deadline_s is not None and age > req.deadline_s:
-                self.counters["timed_out"] += 1
+                self._count("timed_out")
                 self._evict(
                     slot,
                     RequestState.TIMED_OUT,
@@ -482,7 +605,7 @@ class Scheduler:
                 and rec.first_token_at is None
                 and age > req.ttft_deadline_s
             ):
-                self.counters["timed_out"] += 1
+                self._count("timed_out")
                 self._evict(
                     slot,
                     RequestState.TIMED_OUT,
@@ -506,7 +629,13 @@ class Scheduler:
             except Exception as e:  # noqa: BLE001 — retry then re-raise below
                 last = e
                 if attempt < self.retries:
-                    self.counters["retries"] += 1
+                    self._count("retries")
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "retry", cat="fault", lane="scheduler",
+                            args={"what": what, "attempt": attempt + 1,
+                                  "error": repr(e)},
+                        )
                     self._sleep(delay)
                     delay *= 2
         raise DispatchError(
@@ -533,6 +662,8 @@ class Scheduler:
                 rec.first_token_at = self._clock()
             tenant.emitted.extend(new)
             rec.n_tokens = len(tenant.emitted)
+            if self.metrics is not None:
+                self.metrics.counter("serve_tokens_total").inc(len(new))
             if self.on_tokens is not None:
                 self.on_tokens(tenant.req.rid, list(new))
         return stopped
@@ -544,8 +675,10 @@ class Scheduler:
         tenant = self._tenants[slot]
         assert tenant is not None
         if stopped:
-            self.counters["stopped_early"] += 1
+            self._count("stopped_early")
             self.slots = self.engine.release_slot(self.slots, slot)
+        if self.metrics is not None:
+            self.metrics.counter("serve_finished_total").inc()
         self._terminal(
             self.outcomes[tenant.req.rid],
             RequestState.FINISHED,
@@ -594,7 +727,7 @@ class Scheduler:
                         dispatch, what=f"admission prefill (request {req.rid})"
                     )
                 except DispatchError as e:
-                    self.counters["failed"] += 1
+                    self._count("failed")
                     self._terminal(rec, RequestState.FAILED, str(e))
                     continue  # slot still free: try the next queued request
                 rec.transition(RequestState.DECODING, self._clock())
@@ -636,11 +769,11 @@ class Scheduler:
         try:
             return self._with_retry(dispatch, what=f"decode chunk {ordinal}")
         except DispatchError as e:
-            self.counters["decode_dispatch_failures"] += 1
+            self._count("decode_dispatch_failures")
             for slot, tenant in enumerate(self._tenants):
                 if tenant is None:
                     continue
-                self.counters["failed"] += 1
+                self._count("failed")
                 tenant_rec = self.outcomes[tenant.req.rid]
                 self._terminal(
                     tenant_rec, RequestState.FAILED, str(e), tokens=tenant.emitted
@@ -672,8 +805,14 @@ class Scheduler:
         finite = self.engine.finite_logit_rows(self.slots)
         for slot in occupied:
             if not finite[slot]:
-                self.counters["nan_quarantined"] += 1
-                self.counters["failed"] += 1
+                self._count("nan_quarantined")
+                self._count("failed")
+                if self.tracer is not None:
+                    tenant = self._tenants[slot]
+                    self.tracer.instant(
+                        "nan_quarantine", cat="fault", lane="scheduler",
+                        args={"slot": slot, "rid": tenant.req.rid},
+                    )
                 self._evict(
                     slot,
                     RequestState.FAILED,
@@ -689,17 +828,54 @@ class Scheduler:
         self._enforce_deadlines()
         done.extend(self._admit_free_slots())
         if self.n_active == 0:
+            self._observe_gauges()
             return done
-        res = self._dispatch_decode()
-        if res is None:
-            return done
-        toks, valid, self.slots = res
-        self.decode_steps += self.chunk
-        if self.speculate is not None:
-            self.chunk_rows += self.n_active * self.chunk
-        toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))  # staticcheck: host-sync(the one documented per-chunk fetch)
-        valid = np.asarray(valid)  # staticcheck: host-sync(the one documented per-chunk fetch)
-        self.steps_active += int(valid.sum())  # staticcheck: host-sync(valid already fetched above)
+        # the chunk span reads the *tracer's* clock (never the scheduler's:
+        # tracing must not perturb StepClock-driven deadlines); a no-op
+        # handle when tracer is None/disabled
+        # the span covers dispatch AND the chunk-boundary host fetch — the
+        # fetch is the sync point, so this is the chunk's true wall time; it
+        # reads the *tracer's* clock (never the scheduler's: tracing must not
+        # perturb StepClock-driven deadlines)
+        span = (
+            self.tracer.span(
+                "decode_chunk", cat="scheduler", lane="scheduler",
+                ordinal=self._chunk_ordinal, active=self.n_active,
+                chunk=self.chunk, spec=self.speculate is not None,
+            )
+            if self.tracer is not None
+            else None
+        )
+        if span is not None:
+            span.__enter__()
+        try:
+            res = self._dispatch_decode()
+            if self.metrics is not None:
+                self.metrics.counter("serve_decode_chunks_total").inc()
+            if res is None:
+                self._observe_gauges()
+                return done
+            toks, valid, self.slots = res
+            self.decode_steps += self.chunk
+            if self.speculate is not None:
+                self.chunk_rows += self.n_active * self.chunk
+            toks = np.asarray(toks)  # (B, chunk) / (B, chunk*(gamma+1))  # staticcheck: host-sync(the one documented per-chunk fetch)
+            valid = np.asarray(valid)  # staticcheck: host-sync(the one documented per-chunk fetch)
+            committed = int(valid.sum())  # staticcheck: host-sync(valid already fetched above)
+            self.steps_active += committed
+            if span is not None:
+                span.annotate(tokens=committed)
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+        if self.speculate is not None and self.tracer is not None:
+            self._trace_spec_subchunks(valid)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "serve_chunk_commit_tokens",
+                "tokens committed per decode chunk",
+                buckets=tuple(float(2**i) for i in range(10)),
+            ).observe(committed)
 
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:
@@ -714,7 +890,38 @@ class Scheduler:
                 if c is not None:
                     done.append(c)
         self._inject_and_guard_nan()
+        self._observe_gauges()
         return done
+
+    def _trace_spec_subchunks(self, valid: np.ndarray) -> None:
+        """Speculative draft/verify/rollback annotation. Draft + verify are
+        fused into the one device dispatch the chunk span already covers, so
+        per-sub-chunk *timing* needs ``jax.profiler`` (DESIGN.md §11); what
+        the host does know exactly — per row and sub-chunk, how many drafted
+        tokens the verifier kept and how many rolled back — is emitted as
+        ``spec_verify`` instants derived from the fetched valid mask."""
+        gamma = self.speculate.gamma
+        ordinal = self._chunk_ordinal - 1
+        for slot, tenant in enumerate(self._tenants):
+            if tenant is None:
+                continue
+            if tenant.req.speculate is False:
+                continue  # plain rows have no draft to account for
+            # valid row layout: chunk sub-chunks of (gamma accepted-draft
+            # slots + 1 bonus/target token)
+            sub = valid[slot].reshape(self.chunk, gamma + 1)
+            for j in range(self.chunk):
+                committed = int(sub[j].sum())  # staticcheck: host-sync(valid mask already fetched at the chunk boundary)
+                if committed == 0:
+                    continue  # row went inactive before this sub-chunk
+                accepted = max(0, committed - 1)
+                self.tracer.instant(
+                    "spec_verify", cat="speculative",
+                    lane=f"req:{tenant.req.rid}",
+                    args={"chunk": ordinal, "sub": j, "drafted": gamma,
+                          "accepted": accepted,
+                          "rolled_back": gamma - accepted},
+                )
 
     def run(self, max_chunks: int = 100_000) -> List[Completion]:
         """Drain the queue completely; returns completions in finish order.

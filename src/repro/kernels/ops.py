@@ -110,6 +110,21 @@ def qmatmul(
     impl, interpret = f.resolve_impl(impl, interpret)
     out_dtype = out_dtype or x.dtype
 
+    # per-format dispatch accounting on the process-global registry. qmatmul
+    # runs at TRACE time (call sites live inside jitted models), so these are
+    # traced-kernel-call-site counts per compilation — a compile-time census
+    # (which format/impl the program actually lowered) with zero runtime
+    # overhead and no host callback in the compiled program. repro.obs is
+    # pure stdlib, so kernels → obs adds no import cycle.
+    from repro.obs.metrics import default_registry
+
+    default_registry().counter(
+        "qmatmul_dispatch_total",
+        "qmatmul call sites traced, by format and kernel impl",
+        fmt=f.name,
+        impl=impl,
+    ).inc()
+
     lead = x.shape[:-1]
     k = x.shape[-1]
     if k != qt.k:

@@ -44,6 +44,8 @@ pre-import peek — same constraint launch/dryrun.py documents).
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import time
 
 from repro.launch._hostdev import force_host_devices_for_tp
@@ -106,11 +108,16 @@ def pareto_arrivals(n, rate, alpha=1.5, seed=0):
     return np.cumsum(rng.pareto(alpha, size=n) * scale)
 
 
-def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk, speculate=None):
+def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk, speculate=None,
+                     tracer=None, metrics=None):
     """Wall-clock serve loop: submit each request at its arrival offset, step
     the scheduler whenever there is work. Returns (scheduler, completions,
-    makespan_s) — the scheduler is handed back for utilisation stats."""
-    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk, speculate=speculate)
+    makespan_s) — the scheduler is handed back for utilisation stats.
+
+    ``tracer``/``metrics`` (repro.obs) instrument the run: per-request
+    lifecycle spans and the serving metric catalog (DESIGN.md §11)."""
+    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk, speculate=speculate,
+                      tracer=tracer, metrics=metrics)
     done = []
     t0 = time.perf_counter()
     i = 0
@@ -181,6 +188,19 @@ def main() -> None:
                          "N-way model mesh under shard_map (greedy tokens "
                          "identical to --tp 1; CPU hosts get N forced "
                          "placeholder devices)")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="instrument the serve loop with the repro.obs span "
+                         "tracer + metrics registry and write a Chrome/"
+                         "Perfetto trace-event JSON here (open in "
+                         "ui.perfetto.dev); prints the metric snapshot too. "
+                         "Host-side spans only — see --profile-dir for "
+                         "device timelines")
+    ap.add_argument("--profile-dir", type=str, default=None, metavar="DIR",
+                    help="opt-in jax.profiler capture: wrap the serve loop "
+                         "in jax.profiler.trace(DIR), recording XLA device "
+                         "timelines (plus the engine's TraceAnnotation "
+                         "scopes) for TensorBoard/Perfetto. Off by default — "
+                         "profiling is never free")
     args = ap.parse_args()
     if args.tp < 1:
         ap.error("--tp must be >= 1")
@@ -223,24 +243,38 @@ def main() -> None:
         print(f"tensor-parallel: {args.tp}-way model mesh over "
               f"{[str(d) for d in mesh.devices.flat]}")
 
+    tracer = registry = None
+    if args.trace_out:
+        from repro.obs import MetricsRegistry, Tracer
+
+        tracer, registry = Tracer(), MetricsRegistry()
+
+    profile_cm = contextlib.nullcontext()
+    if args.profile_dir:
+        profile_cm = jax.profiler.trace(args.profile_dir)
+        print(f"jax.profiler capture -> {args.profile_dir}")
+
     headroom = (spec.gamma + 1) if spec else 0
     engine = Engine(cfg, params, mesh=mesh,
-                    max_seq=args.prompt_len + args.gen + 8 + headroom)
+                    max_seq=args.prompt_len + args.gen + 8 + headroom,
+                    tracer=tracer)
     del params  # the engine holds the fused layout; free the unfused tree
     reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen)
     arrivals = poisson_arrivals(args.requests, args.rate, seed=1)
     total_new = sum(r.max_new_tokens for r in reqs)
 
     if args.sequential:
-        outs, dt = drive_sequential(engine, reqs, arrivals)
+        with profile_cm:
+            outs, dt = drive_sequential(engine, reqs, arrivals)
         print(f"[sequential] {len(outs)} requests, {total_new} tokens in "
               f"{dt:.2f}s ({total_new/dt:.1f} tok/s on this host)")
         print("sample:", outs[0].tokens[0, args.prompt_len:])
     else:
-        sched, done, dt = drive_continuous(
-            engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk,
-            speculate=spec,
-        )
+        with profile_cm:
+            sched, done, dt = drive_continuous(
+                engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk,
+                speculate=spec, tracer=tracer, metrics=registry,
+            )
         util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
         tag = "continuous"
         extra = ""
@@ -255,6 +289,20 @@ def main() -> None:
               f"{args.slots} slots, chunk={args.chunk}, "
               f"slot utilisation {util:.0%}{extra})")
         print("sample:", done[0].new_tokens)
+
+    if tracer is not None:
+        with open(args.trace_out, "w") as f:
+            json.dump(tracer.to_chrome(), f)
+        st = tracer.stats()
+        print(f"trace: {args.trace_out} ({st['buffered']} events, "
+              f"{st['evicted']} evicted) — open in ui.perfetto.dev")
+        if registry is not None and not args.sequential:
+            counters = {
+                name: sum(s["value"] for s in fam["series"])
+                for name, fam in registry.snapshot().items()
+                if fam["type"] == "counter"
+            }
+            print("metrics:", json.dumps(counters, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -14,8 +14,12 @@ continuous-batching scheduler to real clients:
 - an **aiohttp WebSocket app** (:func:`make_app`) on top: one request per
   socket, token frames as they decode, client disconnect honoured as
   cancellation at the next chunk boundary, admission control under burst
-  load (a full queue rejects loudly instead of buffering without bound), and
-  a ``/v1/metrics`` endpoint reporting per-request TTFT/TPOT p50/p95/p99.
+  load (a full queue rejects loudly instead of buffering without bound), a
+  ``/v1/metrics`` endpoint reporting per-request TTFT/TPOT p50/p95/p99 as
+  JSON (``?format=prometheus`` for the text exposition over the session's
+  metrics registry + the process-global qmatmul dispatch counts), and a
+  ``/v1/trace`` endpoint exporting the session tracer's recent window as
+  Chrome/Perfetto trace-event JSON (DESIGN.md §11).
   aiohttp is optional — the session core works without it (and is what the
   differential tests drive); ``make_app`` raises if it is missing.
 
@@ -62,6 +66,7 @@ from repro.infer import (
     RequestState,
     Scheduler,
 )
+from repro.obs import MetricsRegistry, Tracer, default_registry, prometheus_text
 
 try:  # aiohttp is optional: the session core must import without it
     from aiohttp import WSMsgType, web
@@ -156,11 +161,25 @@ class ServeSession:
         nan_guard: bool = True,
         faults: Optional[FaultPlan] = None,
         idle_wait_s: float = 0.005,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        observe: bool = True,
     ):
+        """``tracer``/``metrics`` default to fresh per-session instances
+        (``observe=False`` turns both off unless passed explicitly): a
+        serving session should always be able to answer ``/v1/trace`` and
+        ``/v1/metrics`` — the observability layer is host-side-only and
+        never perturbs tokens (tests/test_obs.py), so on-by-default is
+        safe. Pass a shared registry/tracer to aggregate across sessions."""
         self._engine = engine
         self._faults = faults
         self._max_buffer = max_buffer
         self._idle_wait_s = idle_wait_s
+        if observe:
+            tracer = Tracer() if tracer is None else tracer
+            metrics = MetricsRegistry() if metrics is None else metrics
+        self.tracer = tracer
+        self.registry = metrics
         self.sched = Scheduler(
             engine,
             n_slots=n_slots,
@@ -171,6 +190,8 @@ class ServeSession:
             faults=faults,
             on_tokens=self._on_tokens,
             on_event=self._on_event,
+            tracer=tracer,
+            metrics=metrics,
         )
         self._inbox: deque = deque()  # ("submit", req) | ("cancel", rid, reason)
         self._wake = threading.Event()
@@ -181,6 +202,18 @@ class ServeSession:
         self._streams: Dict[int, "asyncio.Queue[StreamEvent]"] = {}
         self._rids = itertools.count()
         self.counters = {"overflow_cancelled": 0, "rejected": 0}
+        if self.registry is not None:
+            for key in self.counters:
+                self.registry.counter(
+                    f"server_{key}_total", f"server-side events: {key}"
+                )
+
+    def _count(self, key: str, n: int = 1) -> None:
+        """Server-side counter increments, mirrored into the registry as
+        ``server_<key>_total`` (same lockstep contract as the scheduler)."""
+        self.counters[key] += n
+        if self.registry is not None:
+            self.registry.counter(f"server_{key}_total").inc(n)
 
     # -- lifecycle of the session itself -------------------------------------
 
@@ -239,10 +272,34 @@ class ServeSession:
     def metrics(self) -> dict:
         """Scheduler lifecycle/latency summary + server-side counters.
         Snapshot read across threads: dict/int reads are atomic under the
-        GIL, and the records it summarises are terminal (immutable)."""
+        GIL, and the records it summarises are terminal (immutable). With a
+        registry attached, its full snapshot (queue depth, slot occupancy,
+        speculative acceptance, histograms, ...) rides along under
+        ``registry`` and the tracer's ring stats under ``tracer``."""
         out = self.sched.summary()
         out["server"] = dict(self.counters)
+        if self.registry is not None:
+            out["registry"] = self.registry.snapshot()
+        if self.tracer is not None:
+            out["tracer"] = self.tracer.stats()
         return out
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition over the session registry plus the
+        process-global default registry (per-format qmatmul dispatch counts),
+        deduplicated when they are the same object."""
+        if self.registry is None:
+            raise RuntimeError("session has no metrics registry (observe=False)")
+        regs = [self.registry]
+        if self.registry is not default_registry():
+            regs.append(default_registry())
+        return prometheus_text(*regs)
+
+    def trace_json(self) -> dict:
+        """The session tracer's buffered window as a Chrome trace object."""
+        if self.tracer is None:
+            raise RuntimeError("session has no tracer (observe=False)")
+        return self.tracer.to_chrome()
 
     # -- pump thread ----------------------------------------------------------
 
@@ -258,7 +315,12 @@ class ServeSession:
             # slow client: its buffer is full. Cancel the request rather than
             # grow host memory; the terminal event will still be delivered
             # (terminal events bypass the bound — the stream is closing).
-            self.counters["overflow_cancelled"] += 1
+            self._count("overflow_cancelled")
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "overflow_cancel", cat="server", lane="pump",
+                    args={"rid": rid, "max_buffer": self._max_buffer},
+                )
             self.sched.cancel(
                 rid,
                 f"slow client: stream buffer overflowed ({self._max_buffer} "
@@ -298,7 +360,7 @@ class ServeSession:
                     self.sched.submit(req)
                     self._post(req.rid, StreamEvent(kind="accepted", rid=req.rid))
                 except QueueFullError as e:
-                    self.counters["rejected"] += 1
+                    self._count("rejected")
                     self._post(
                         req.rid,
                         StreamEvent(kind="rejected", rid=req.rid, reason=str(e)),
@@ -316,8 +378,18 @@ class ServeSession:
         return n
 
     def _pump(self) -> None:
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("pump_start", cat="server", lane="pump")
         while True:
-            drained = self._drain_inbox()
+            if self._inbox and tr is not None:
+                # span only when there is work: the idle poll must not fill
+                # the ring with empty drains
+                with tr.span("drain_inbox", cat="server", lane="pump") as sp:
+                    drained = self._drain_inbox()
+                    sp.annotate(items=drained)
+            else:
+                drained = self._drain_inbox()
             if self._stop_flag:
                 break
             if self.sched.idle and not drained:
@@ -331,6 +403,8 @@ class ServeSession:
             if not rec.state.terminal:
                 self.sched.cancel(rid, "server shutting down")
         self.sched.step()
+        if tr is not None:
+            tr.instant("pump_stop", cat="server", lane="pump")
 
 
 # -- aiohttp transport --------------------------------------------------------
@@ -369,8 +443,30 @@ def make_app(session: ServeSession) -> "web.Application":
     async def healthz(_request):
         return web.json_response({"ok": True})
 
-    async def metrics(_request):
+    async def metrics(request):
+        # ?format=prometheus (or an Accept header naming the exposition
+        # content type) switches to Prometheus text; default stays the JSON
+        # summary existing consumers parse
+        fmt = request.query.get("format", "")
+        accept = request.headers.get("Accept", "")
+        if fmt == "prometheus" or "application/openmetrics-text" in accept:
+            if session.registry is None:
+                return web.json_response(
+                    {"error": "session has no metrics registry"}, status=501
+                )
+            return web.Response(
+                text=session.prometheus(),
+                content_type="text/plain",
+                charset="utf-8",
+            )
         return web.json_response(session.metrics())
+
+    async def trace(_request):
+        if session.tracer is None:
+            return web.json_response(
+                {"error": "session has no tracer"}, status=501
+            )
+        return web.json_response(session.trace_json())
 
     async def stream(request):
         ws = web.WebSocketResponse()
@@ -419,6 +515,7 @@ def make_app(session: ServeSession) -> "web.Application":
     app = web.Application()
     app.router.add_get("/healthz", healthz)
     app.router.add_get("/v1/metrics", metrics)
+    app.router.add_get("/v1/trace", trace)
     app.router.add_get("/v1/stream", stream)
     return app
 

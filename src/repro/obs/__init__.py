@@ -1,0 +1,47 @@
+"""Serving-stack observability (DESIGN.md §11): host-side, zero-dependency.
+
+LUT-GEMM's claims are latency claims — the paper's headline is measured
+token-generation speedup — so the serving stack must be *observable* at the
+same granularity it is optimised: per request, per decode chunk, per
+quantized-kernel dispatch. This package is the one place that machinery
+lives:
+
+- :mod:`repro.obs.trace`   — a low-overhead ring-buffered span tracer with an
+  injectable clock, exportable as Chrome/Perfetto trace-event JSON
+  (``python -m repro.obs.trace`` captures a demo serve; ``/v1/trace`` on the
+  async server exports a live session).
+- :mod:`repro.obs.metrics` — counters / gauges / exponential-bucket
+  histograms behind a thread-safe registry, exportable as a JSON snapshot or
+  Prometheus text format (``/v1/metrics``).
+
+Contract: **everything here is host-side**. Nothing in ``repro.obs`` may
+import jax or the jitted kernel/model modules (enforced by the
+``lint/obs-host-only`` staticcheck rule), and the instrumentation hooks in
+``infer/``/``launch/`` fire only *between* engine dispatches — never inside a
+jitted computation — so instrumented serving stays bit-identical to
+uninstrumented serving and the §3 trace-once invariant holds (both asserted
+in tests/test_obs.py).
+"""
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    parse_prometheus,
+    prometheus_text,
+)
+from repro.obs.trace import Tracer, validate_chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "default_registry",
+    "parse_prometheus",
+    "prometheus_text",
+    "validate_chrome_trace",
+]
