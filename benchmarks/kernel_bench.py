@@ -140,6 +140,12 @@ def _format_bytes(fmt: str, k: int, o: int, q: int, g: int,
     the paper's comparison isolates."""
     if fmt == "bcq":
         return bcq_bytes(k, o, q, g, scale_bytes)  # paper Eq. 3
+    if fmt == "codebook":
+        # q index bit planes + the 2^q-entry centroid table per group
+        return q * (k * o // 8) + (1 << q) * (k * o // g) * scale_bytes
+    if fmt == "ternary":
+        # 2 fixed bit planes (sign + mask) + ONE alpha plane per group
+        return 2 * (k * o // 8) + (k * o // g) * scale_bytes
     # uniform/dequant: q bit planes + a (scale, zero) affine pair per group
     affine = q * (k * o // 8) + 2 * (k * o // g) * scale_bytes
     if fmt == "uniform":
@@ -148,11 +154,12 @@ def _format_bytes(fmt: str, k: int, o: int, q: int, g: int,
 
 
 def _format_rows(rng) -> list:
-    """BCQ vs uniform vs dequant decode matvec at the same (q, g) — the
-    paper's kernel-comparison shape, reproduced on host. CPU interpret wall
-    time is the functional proxy; the modeled v5e latency (memory-bound byte
-    stream + 2us per dispatch) carries the claim, and shows the dequant
-    baseline strictly slower than the one-pass kernels."""
+    """Every registered format's decode matvec at the same (q, g) — the
+    paper's kernel-comparison shape, reproduced on host, with all five
+    formats priced on one axis. CPU interpret wall time is the functional
+    proxy; the modeled v5e latency (memory-bound byte stream + 2us per
+    dispatch) carries the claim, and shows the dequant baseline strictly
+    slower than the one-pass kernels."""
     k = o = 1024
     q, g, B = 4, 128, 1
     w = jnp.asarray(rng.standard_normal((k, o)), jnp.float32)
@@ -160,7 +167,7 @@ def _format_rows(rng) -> list:
     act_bytes = B * k * 4 + B * o * 4
     launch_us = 2.0
     rows, model_us = [], {}
-    for fmt in ("bcq", "uniform", "dequant"):
+    for fmt in ("bcq", "uniform", "dequant", "codebook", "ternary"):
         qt = quantize_tensor(
             w, q, g, iters=1, scale_dtype=jnp.float32, method="greedy", fmt=fmt
         )

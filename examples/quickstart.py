@@ -117,12 +117,15 @@ for q_draft in (1, 2, 3):
           f"weight rel error = {rel:.4f} (monotone in q')")
 
 # the format registry (DESIGN.md §2.4): the same qmatmul dispatch serves BCQ,
-# FineQuant-style group-wise uniform int-q, and the paper's dequantize-then-
-# matmul baseline — `python -m repro.launch.serve --format {bcq,uniform,dequant}`
-# runs each end-to-end; benchmarks/kernel_bench.py records the comparison rows
+# FineQuant-style group-wise uniform int-q, the paper's dequantize-then-matmul
+# baseline, FLUTE-style arbitrary-codebook (k-means centroids; method="nf4"
+# for the fixed QLoRA grid), and T-MAC-style ternary (2 bits + one alpha per
+# group; truncation-capable like bcq) — `python -m repro.launch.serve
+# --format NAME` runs each end-to-end (choices track the registry);
+# benchmarks/kernel_bench.py records the comparison rows
 print(f"\nregistered formats: {format_names()}")
-for fmt in ("bcq", "uniform", "dequant"):
-    qf = quantize_tensor(w, q=4, g=128, iters=8, fmt=fmt)
+for fmt in format_names():
+    qf = quantize_tensor(w, q=4, g=128, iters=4, fmt=fmt)
     (y,) = qmatmul(fmt, x, qf, impl="ref")
     rel = float(jnp.linalg.norm(y - y_dense) / jnp.linalg.norm(y_dense))
     kernels = ", ".join(get_format(fmt).impls)

@@ -1,8 +1,10 @@
 """End-to-end serving driver (the paper's kind: inference) — batched requests
 through the prefill/decode split engine with packed BCQ weights (Fig. 13),
 plus the other registered quantization formats (DESIGN.md §2.4: FineQuant-
-style ``uniform`` int-q and the ``dequant`` dequantize-then-matmul baseline,
-asserted bit-identical to ``uniform`` since they share one packing),
+style ``uniform`` int-q, the ``dequant`` dequantize-then-matmul baseline
+asserted bit-identical to ``uniform`` since they share one packing, the
+FLUTE-style ``codebook`` with per-group k-means centroids, and T-MAC-style
+``ternary`` — which, being masked BCQ, also self-speculates),
 then the same requests again with self-speculative decoding (DESIGN.md §5):
 the nested low-bit planes of the SAME packed weights draft tokens that the
 full-precision model verifies, with the acceptance rate printed next to the
@@ -150,18 +152,25 @@ def main():
     prompts = prompts.astype(np.int32)
 
     # format registry (DESIGN.md §2.4): the same engine serves BCQ, uniform
-    # int-q, and the paper's dequantize-then-matmul baseline — only the
-    # QuantPolicy's fmt changes. uniform/dequant share one packing, so their
-    # greedy outputs are asserted bit-identical (kernel pipeline isolated).
+    # int-q, the paper's dequantize-then-matmul baseline, the FLUTE-style
+    # arbitrary codebook (per-group k-means centroids; method="nf4" would pin
+    # the fixed QLoRA grid), and T-MAC-style ternary — only the QuantPolicy's
+    # fmt changes. uniform/dequant share one packing, so their greedy outputs
+    # are asserted bit-identical (kernel pipeline isolated).
     qp_uni = quantize_params(params, QuantPolicy(q=4, g=64, fmt="uniform"))
     qp_deq = quantize_params(params, QuantPolicy(q=4, g=64, fmt="dequant"))
+    qp_cbk = quantize_params(params, QuantPolicy(q=4, g=64, iters=4, fmt="codebook"))
+    qp_ter = quantize_params(params, QuantPolicy(q=4, g=64, fmt="ternary"))
     print(f"uniform q=4 g=64 bytes: {quantized_bytes(qp_uni)/2**20:.2f} MiB")
+    print(f"codebook q=4 g=64 bytes: {quantized_bytes(qp_cbk)/2**20:.2f} MiB")
+    print(f"ternary g=64 bytes: {quantized_bytes(qp_ter)/2**20:.2f} MiB "
+          "(2 planes + one alpha/group, whatever the policy's q)")
 
     toks = args.batch * args.gen
     fmt_tokens = {}
     for tag, p in (
         ("dense", params), ("bcq-q4", qp), ("uniform-q4", qp_uni),
-        ("dequant-q4", qp_deq),
+        ("dequant-q4", qp_deq), ("codebook-q4", qp_cbk), ("ternary", qp_ter),
     ):
         eng = Engine(cfg, p, max_seq=args.prompt_len + args.gen + 8)
         t0 = time.perf_counter()
@@ -175,6 +184,18 @@ def main():
     assert np.array_equal(fmt_tokens["uniform-q4"], fmt_tokens["dequant-q4"]), (
         "uniform and dequant share one packing — greedy output must match"
     )
+
+    # ternary is the second truncation-capable format: its masked-BCQ identity
+    # hands self-speculation a 1-plane nested draft. Greedy output stays
+    # token-identical to the plain ternary engine.
+    eng_ter = Engine(cfg, qp_ter, max_seq=args.prompt_len + args.gen + 16)
+    res_ter = eng_ter.generate(prompts, args.gen, speculate=SpecConfig(1, 3))
+    assert np.array_equal(res_ter.tokens, fmt_tokens["ternary"]), (
+        "ternary self-speculation must be exact"
+    )
+    st_ter = res_ter.spec_stats
+    print(f"ternary+spec: draft q'={st_ter['q_draft']} acceptance "
+          f"{st_ter['accept_rate']:.0%} — token-identical to plain ternary")
 
     # self-speculative decode: the nested 2-bit planes of the SAME packed
     # weights draft gamma tokens per chunk; the 4-bit model verifies them in

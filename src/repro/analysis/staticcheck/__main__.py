@@ -26,7 +26,7 @@ def main(argv=None) -> int:
     )
     parser.add_argument(
         "--fmts", nargs="*", default=None,
-        help="quant formats (default: dense bcq uniform dequant)",
+        help="quant formats (default: dense bcq uniform dequant codebook ternary)",
     )
     parser.add_argument(
         "--tps", nargs="*", type=int, default=[1, 2, 4],

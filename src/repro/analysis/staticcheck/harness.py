@@ -38,7 +38,7 @@ from repro.models import init_cache, init_params
 from repro.quant.quantize import QuantPolicy, quantized_structs
 
 # the default grid: every registered arch, dense + every registered format
-DEFAULT_FMTS = ("dense", "bcq", "uniform", "dequant")
+DEFAULT_FMTS = ("dense", "bcq", "uniform", "dequant", "codebook", "ternary")
 DEFAULT_TPS = (1, 2, 4)
 # struct-trace policy: q/g that divide every registered config's matmul dims
 TRACE_Q, TRACE_G = 3, 128

@@ -97,7 +97,11 @@ def sweep_configs(
 
     checked, violations, skips = 0, [], []
     budget = introspect.vmem_budget()
-    fmts = [f for f in (fmts or ("bcq", "uniform", "dequant")) if f != "dense"]
+    fmts = [
+        f
+        for f in (fmts or ("bcq", "uniform", "dequant", "codebook", "ternary"))
+        if f != "dense"
+    ]
     for arch in archs or ARCH_IDS:
         for fmt in fmts:
             impls = get_format(fmt).impls

@@ -22,6 +22,17 @@ Registered formats
              but served through an explicit dequantize-into-HBM-then-GEMM
              pipeline (``dequant_mm``). Exists so the baseline side of
              Table 3 / Fig. 9 is executable code, not just a citation.
+``codebook`` FLUTE-style arbitrary codebook: per-(group, column) table of
+             ``2^q`` learned scalar centroids (k-means, or the fixed NF4 grid
+             via ``method="nf4"``) with ``q`` index bit planes. Kernel:
+             ``codebook_mm`` (LUT retrieve from the VMEM-resident table →
+             MXU) — the paper's LUT mechanism generalized beyond sign
+             patterns.
+``ternary``  T-MAC ``tl2``-style {-1, 0, +1}: two packed bit planes (sign +
+             mask) and ONE per-group magnitude ``alpha``. Kernel:
+             ``ternary_mm``. Ternary is masked BCQ (``t = 0.5·b1 + 0.5·b2``),
+             so it supports ``truncate`` — self-speculation gets a nested
+             1-plane BCQ draft at sub-1-bit cost.
 
 Shared physical layout (so sharding/fusion/stacking machinery is generic):
 ``packed (…, P, k//8, o)`` uint8 code planes, ``scales (…, S, k//g, o)`` group
@@ -35,6 +46,8 @@ format        truncate  fuse       kernels (autotune impl keys)
 ``bcq``       yes       yes        ``bcq_mm``, ``lutgemm``
 ``uniform``   no        yes        ``uniform_mm``
 ``dequant``   no        yes        ``dequant_mm`` (materialise + GEMM)
+``codebook``  no        yes        ``codebook_mm`` (LUT retrieve + MXU)
+``ternary``   yes       yes        ``ternary_mm`` (drafts run ``bcq_mm``)
 ============  ========  =========  =====================================
 """
 
@@ -452,12 +465,239 @@ class DequantFormat(UniformFormat):
 
 
 # ---------------------------------------------------------------------------
+# codebook — FLUTE-style arbitrary-codebook (learned centroids or NF4 grid)
+# ---------------------------------------------------------------------------
+
+# The QLoRA NF4 grid: 16 quantiles of N(0, 1) normalised to [-1, 1]; a weight
+# group is coded as ``absmax · level`` — the fixed-codebook special case.
+_NF4_LEVELS = (
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+)
+
+
+def _kmeans_centroids(grouped: jax.Array, q: int, iters: int) -> jax.Array:
+    """Per-(group, column) 1-D Lloyd k-means: ``(G, g, o)`` → ``(G, 2^q, o)``.
+
+    Quantile init (centroid ``i`` at the ``(i+0.5)/2^q`` percentile of the
+    group) then ``iters`` assign/update rounds; an empty cluster keeps its old
+    centroid. Fully traceable — ``quant/quantize.py`` maps this over
+    layer-stacked leaves under ``jax.lax.map``.
+    """
+    n = 1 << q
+    probs = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
+    cent = jnp.moveaxis(jnp.quantile(grouped, probs, axis=1), 0, 1)  # (G, n, o)
+
+    def step(cent, _):
+        d = jnp.abs(grouped[:, :, None, :] - cent[:, None, :, :])  # (G, g, n, o)
+        onehot = jax.nn.one_hot(jnp.argmin(d, axis=2), n, axis=2)  # (G, g, n, o)
+        counts = onehot.sum(axis=1)  # (G, n, o)
+        sums = (grouped[:, :, None, :] * onehot).sum(axis=1)
+        cent = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cent)
+        return cent, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=max(int(iters), 1))
+    return cent
+
+
+class CodebookFormat(QuantFormat):
+    """Arbitrary scalar codebook per (group, column): ``2^q`` centroids in the
+    scales planes, ``q`` index bit planes in the packed planes. The kernel
+    retrieves centroids from the VMEM-resident table — the paper's LUT
+    mechanism generalized beyond sign patterns (FLUTE)."""
+
+    name = "codebook"
+    impls = ("codebook_mm",)
+
+    def quantize(
+        self, w, *, q, g, scale_dtype=jnp.bfloat16, method="alternating", iters=8
+    ) -> QuantizedTensor:
+        """``method``: any of the shared solver names (``alternating`` /
+        ``greedy`` / ``kmeans``) runs per-group Lloyd k-means — policies drive
+        every format with one vocabulary; ``nf4`` selects the fixed QLoRA grid
+        scaled by the group absmax (requires ``q == 4``)."""
+        k, o = w.shape
+        bcq_lib._check_args(k, q, g)
+        grouped = w.astype(jnp.float32).reshape(k // g, g, o)
+        if method == "nf4":
+            if q != 4:
+                raise ValueError(
+                    f"method 'nf4' is a fixed 16-entry codebook; needs q=4, got q={q}"
+                )
+            levels = jnp.asarray(_NF4_LEVELS, jnp.float32)
+            absmax = jnp.max(jnp.abs(grouped), axis=1)  # (G, o)
+            cent = levels[None, :, None] * absmax[:, None, :]  # (G, 16, o)
+        elif method in ("alternating", "greedy", "kmeans"):
+            cent = _kmeans_centroids(grouped, q, iters)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        codes = jnp.argmin(
+            jnp.abs(grouped[:, :, None, :] - cent[:, None, :, :]), axis=2
+        )  # (G, g, o)
+        packed = packing.pack_codes(codes.reshape(k, o).astype(jnp.uint8), q)
+        scales = jnp.swapaxes(cent, 0, 1).astype(scale_dtype)  # (2^q, G, o)
+        return QuantizedTensor(
+            packed=packed, scales=scales, g=g, k=k, o=o, fmt=self.name
+        )
+
+    def dequantize(self, qt, dtype=jnp.float32):
+        codes = packing.unpack_codes(qt.packed)  # (…, k, o) int32
+        *lead, k, o = codes.shape
+        cent = jnp.swapaxes(qt.scales.astype(jnp.float32), -3, -2)  # (…, G, 2^q, o)
+        idx = codes.reshape(*lead, k // qt.g, qt.g, o)
+        w = jnp.take_along_axis(cent, idx, axis=-2)  # (…, G, g, o)
+        return w.reshape(*lead, k, o).astype(dtype)
+
+    def matvec(self, xb, qt, *, impl, interpret):
+        from repro.kernels.codebook_mm import codebook_mm
+
+        return _pallas_matvec(xb, qt, codebook_mm, impl, interpret)
+
+    def scales_shape(self, q, groups, o):
+        return (1 << q, groups, o)
+
+
+# ---------------------------------------------------------------------------
+# ternary — T-MAC tl2-style {-1, 0, +1} (masked BCQ; supports truncation)
+# ---------------------------------------------------------------------------
+
+
+class TernaryFormat(QuantFormat):
+    """{-1, 0, +1} codes as two packed bit planes (sign + nonzero mask) and one
+    per-group magnitude ``alpha`` — 2 bits + one scale per group, less storage
+    than 2-bit BCQ (which carries two scale planes).
+
+    Ternary IS masked BCQ: ``t = 0.5·b1 + 0.5·b2`` with ``b1 = sign | ~mask``
+    and ``b2 = sign & mask`` (bit-wise on the packed bytes) — exact in float
+    (``0.5·alpha`` and the ±0.5 sums are exact), which is what makes
+    ``truncate`` available: the 1-plane slice is a genuine nested BCQ draft at
+    0.5 bits of extra storage over nothing (self-speculation, DESIGN.md §4).
+    """
+
+    name = "ternary"
+    impls = ("ternary_mm",)
+    supports_truncate = True
+
+    PLANES = 2  # sign + mask, fixed — the policy's q does not change storage
+
+    def quantize(
+        self, w, *, q, g, scale_dtype=jnp.bfloat16, method="alternating", iters=8
+    ) -> QuantizedTensor:
+        """TWN-style ternarisation per (group, column): threshold init
+        ``Δ = 0.75·mean|w|``, then ``iters`` alternating refinements of
+        ``alpha = mean(|w| over mask)`` and ``Δ = alpha/2`` (the 1-D Lloyd
+        condition for {-α, 0, +α}). ``q``/``method`` are accepted but do not
+        change the stored planes — ternary is fixed at 2."""
+        del q, method
+        k, o = w.shape
+        bcq_lib._check_args(k, self.PLANES, g)
+        grouped = w.astype(jnp.float32).reshape(k // g, g, o)
+        absg = jnp.abs(grouped)
+        delta = 0.75 * absg.mean(axis=1)  # (G, o) — the TWN threshold
+
+        def refine(delta, _):
+            mask = absg > delta[:, None, :]
+            cnt = jnp.maximum(mask.sum(axis=1), 1)
+            alpha = (absg * mask).sum(axis=1) / cnt
+            return 0.5 * alpha, alpha
+
+        delta, alphas = jax.lax.scan(refine, delta, None, length=max(int(iters), 1))
+        alpha = alphas[-1]
+        mask = absg > delta[:, None, :]
+
+        sign_pm = jnp.where(grouped >= 0, 1, -1).astype(jnp.int8)
+        mask_pm = jnp.where(mask, 1, -1).astype(jnp.int8)
+        planes = jnp.stack([sign_pm, mask_pm]).reshape(self.PLANES, k, o)
+        return QuantizedTensor(
+            packed=packing.pack_signs(planes),
+            scales=alpha[None].astype(scale_dtype),  # (1, G, o)
+            g=g,
+            k=k,
+            o=o,
+            fmt=self.name,
+        )
+
+    def dequantize(self, qt, dtype=jnp.float32):
+        planes = packing.unpack_signs(qt.packed).astype(jnp.float32)  # (…, 2, k, o)
+        sign = planes[..., 0, :, :]
+        nonzero = (planes[..., 1, :, :] + 1.0) * 0.5  # {-1,+1} → {0,1}
+        t = sign * nonzero
+        *lead, k, o = t.shape
+        alpha = qt.scales.astype(jnp.float32)[..., 0, :, :]  # (…, G, o)
+        grouped = t.reshape(*lead, k // qt.g, qt.g, o) * alpha[..., :, None, :]
+        return grouped.reshape(*lead, k, o).astype(dtype)
+
+    def matvec(self, xb, qt, *, impl, interpret):
+        from repro.kernels.ternary_mm import ternary_mm
+
+        return _pallas_matvec(xb, qt, ternary_mm, impl, interpret)
+
+    def scales_shape(self, q, groups, o):
+        return (1, groups, o)
+
+    def struct(self, lead, k, o, q, g, scale_dtype):
+        """Ternary stores exactly 2 planes whatever the policy's ``q`` says —
+        the dry-run struct must agree with ``quantize`` (staticcheck traces
+        through these shapes)."""
+        del q
+        return QuantizedTensor(
+            packed=jax.ShapeDtypeStruct((*lead, self.PLANES, k // 8, o), jnp.uint8),
+            scales=jax.ShapeDtypeStruct(
+                (*lead, 1, k // g, o), jnp.dtype(scale_dtype)
+            ),
+            g=g,
+            k=k,
+            o=o,
+            fmt=self.name,
+        )
+
+    def as_bcq(self, qt: QuantizedTensor) -> QuantizedTensor:
+        """The exact 2-plane BCQ view: ``b1 = sign | ~mask``, ``b2 = sign &
+        mask`` on the packed bytes, each plane scaled ``alpha/2``. Float-exact
+        (``0.5·alpha`` is an exponent decrement; ``±0.5 ± 0.5 ∈ {-1, 0, 1}``
+        is exact), so dequantize(as_bcq(qt)) == dequantize(qt) bit-for-bit."""
+        sign = qt.packed[..., 0, :, :]
+        mask = qt.packed[..., 1, :, :]
+        b1 = sign | ~mask
+        b2 = sign & mask
+        half = (0.5 * qt.scales.astype(jnp.float32)).astype(qt.scales.dtype)
+        return QuantizedTensor(
+            packed=jnp.stack([b1, b2], axis=-3),
+            scales=jnp.concatenate([half, half], axis=-3),  # (…, 2, G, o)
+            g=qt.g,
+            k=qt.k,
+            o=qt.o,
+            fmt="bcq",
+        )
+
+    def truncate(self, qt, q_new):
+        """Nested draft views via the masked-BCQ identity: ``q_new == 2`` is
+        the full-precision self (served by ``ternary_mm``); ``q_new == 1``
+        re-tags the ``b1 = sign | ~mask`` plane as a 1-plane BCQ tensor
+        (drafts then dispatch through ``bcq_mm`` — ``ops.qmatmul`` routes per
+        leaf ``fmt``)."""
+        if not 1 <= q_new <= self.PLANES:
+            raise ValueError(
+                f"cannot truncate ternary tensor to q'={q_new} "
+                f"(valid: 1..{self.PLANES})"
+            )
+        if q_new == self.PLANES:
+            return qt
+        return get_format("bcq").truncate(self.as_bcq(qt), q_new)
+
+
+# ---------------------------------------------------------------------------
 # registration (formats + their kernels' autotune measurement entries)
 # ---------------------------------------------------------------------------
 
 register_format(BCQFormat())
 register_format(UniformFormat())
 register_format(DequantFormat())
+register_format(CodebookFormat())
+register_format(TernaryFormat())
 
 
 def _load_uniform_mm():
@@ -472,9 +712,32 @@ def _load_dequant_mm():
     return dequant_mm
 
 
+def _load_codebook_mm():
+    from repro.kernels.codebook_mm import codebook_mm
+
+    return codebook_mm
+
+
+def _load_ternary_mm():
+    from repro.kernels.ternary_mm import ternary_mm
+
+    return ternary_mm
+
+
 def _affine_meas_scales(rng, q, k, o, g):
     return rng.standard_normal((2, k // g, o))
 
 
+def _codebook_meas_scales(rng, q, k, o, g):
+    return rng.standard_normal((1 << q, k // g, o))
+
+
+def _ternary_meas_scales(rng, q, k, o, g):
+    del q
+    return rng.standard_normal((1, k // g, o))
+
+
 autotune.register_measure_kernel("uniform_mm", _load_uniform_mm, _affine_meas_scales)
 autotune.register_measure_kernel("dequant_mm", _load_dequant_mm, _affine_meas_scales)
+autotune.register_measure_kernel("codebook_mm", _load_codebook_mm, _codebook_meas_scales)
+autotune.register_measure_kernel("ternary_mm", _load_ternary_mm, _ternary_meas_scales)

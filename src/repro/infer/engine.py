@@ -511,9 +511,11 @@ class Engine:
     def _validate_spec(self, spec: SpecConfig) -> None:
         cfg = self.cfg
         # capability gate (DESIGN.md §2.4): drafts are nested low-bit views of
-        # the target's own weights, which only residual-nested formats (BCQ)
-        # can provide — refuse before tracing, naming the offending formats
-        from repro.core.formats import get_format
+        # the target's own weights, which only residual-nested formats can
+        # provide — refuse before tracing, naming the offending formats AND
+        # the registered formats that would work (the capability flag, not a
+        # hardcoded name list)
+        from repro.core.formats import format_names, get_format
         from repro.core.qtensor import QuantizedTensor
 
         bad = sorted(
@@ -527,9 +529,13 @@ class Engine:
             }
         )
         if bad:
+            capable = [
+                n for n in format_names() if get_format(n).supports_truncate
+            ]
             raise ValueError(
                 f"speculative decoding needs truncation-capable weight formats; "
-                f"{bad} do not support nested draft truncation (use 'bcq')"
+                f"{bad} do not support nested draft truncation "
+                f"(truncation-capable formats: {capable})"
             )
         if cfg.input_kind != "tokens":
             raise ValueError(

@@ -39,7 +39,9 @@ def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
     ``kernels/introspect.py``): double-buffered x/packed/scales/out blocks,
     the f32 accumulator scratch, and the unpacked sign planes + effective
     weight block the body materialises."""
-    groups = max(block_k // g, 1)
+    from repro.kernels.introspect import scales_block_rows
+
+    groups = scales_block_rows(block_k, g)
     io = 2 * (
         B * block_k * 4  # x block, f32
         + q * (block_k // 8) * block_o  # packed block, uint8

@@ -40,8 +40,10 @@ def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
     is a stock XLA dot — XLA owns its tiling). ``B`` does not enter this
     kernel's schedule; it stays in the signature so every estimator prices the
     same key tuple (``kernels/introspect.py``)."""
+    from repro.kernels.introspect import scales_block_rows
+
     del B
-    groups = max(block_k // g, 1)
+    groups = scales_block_rows(block_k, g)
     io = 2 * (
         q * (block_k // 8) * block_o  # packed bit planes, uint8
         + 2 * groups * block_o * 4  # (scale, zero) block (<= f32)

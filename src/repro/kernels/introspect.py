@@ -32,6 +32,19 @@ F32 = 4
 _ESTIMATORS: Dict[str, Callable[..., int]] = {}
 
 
+def scales_block_rows(block_k: int, g: int) -> int:
+    """Rows of the per-grid-step scales/table block: ``max(block_k // g, 1)``.
+
+    This is the SAME expression every kernel's scales BlockSpec uses
+    (``block_k // g`` when ``g <= block_k``, else ``1`` — the whole k-block
+    lies inside one group), factored out so the VMEM estimators and the
+    kernels cannot drift: under the kernels' validated divisibility contract
+    (``block_k % g == 0 or g % block_k == 0``) the floor IS the exact block
+    row count, never an undercount of a ceil-sized block
+    (tests/test_formats.py property-checks the agreement at ragged shapes)."""
+    return max(block_k // g, 1)
+
+
 def register_vmem_estimator(impl: str, fn: Callable[..., int]) -> None:
     """Register ``impl``'s per-grid-step VMEM estimator (kernel modules call
     this at import; ``fn(B=, block_k=, block_o=, q=, g=) -> bytes``)."""
@@ -39,11 +52,13 @@ def register_vmem_estimator(impl: str, fn: Callable[..., int]) -> None:
 
 
 def _ensure_loaded() -> None:
-    # the four in-tree kernels self-register on import; new formats register
+    # the six in-tree kernels self-register on import; new formats register
     # their own hooks from their kernel modules (DESIGN.md §10)
     import repro.kernels.bcq_mm  # noqa: F401
+    import repro.kernels.codebook_mm  # noqa: F401
     import repro.kernels.dequant_mm  # noqa: F401
     import repro.kernels.lutgemm  # noqa: F401
+    import repro.kernels.ternary_mm  # noqa: F401
     import repro.kernels.uniform_mm  # noqa: F401
 
 

@@ -43,8 +43,10 @@ def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
     input/output pipeline plus this kernel's LUT table and the gathered
     per-plane partial products — the terms that cap ``block_k`` differently
     from the unpack kernel (the autotuner rationale)."""
+    from repro.kernels.introspect import scales_block_rows
+
     C = block_k // MU
-    groups = max(block_k // g, 1)
+    groups = scales_block_rows(block_k, g)
     io = 2 * (
         B * block_k * 4  # x block, f32
         + q * C * block_o  # packed block (LUT keys), uint8

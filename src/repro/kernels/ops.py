@@ -103,7 +103,19 @@ def qmatmul(
     if impl == "auto" and _IMPL_MODE is not None:
         if _IMPL_MODE == "ref":
             impl = "ref"
-        elif f.impls:  # "deploy": the format's preferred Pallas kernel
+        else:  # "deploy": the format's preferred Pallas kernel — REQUIRED.
+            # A format with no registered kernels must fail loudly here: the
+            # old fallthrough left impl="auto", which resolve_impl silently
+            # turned into the ref oracle off-TPU — a deploy trace that prices
+            # the wrong program (staticcheck records this error as a named
+            # skip instead).
+            if not f.impls:
+                raise ValueError(
+                    f"impl_mode('deploy'): format {f.name!r} registers no "
+                    "Pallas kernels (impls is empty) — deploy mode cannot "
+                    "fall back to the ref oracle; register a kernel or trace "
+                    "this format under impl_mode(None)/'ref'"
+                )
             impl = f.impls[0]
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"

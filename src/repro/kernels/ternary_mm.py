@@ -1,14 +1,21 @@
-"""Fused group-wise uniform int-q matmul Pallas kernel (FineQuant-style).
+"""Fused ternary {-1, 0, +1} matvec Pallas kernel (T-MAC's ``tl2`` layout).
 
-``y = x @ Ŵ`` with ``Ŵ = s ∘ C + z`` consumed **directly in packed form**:
-``C`` are unsigned ``q``-bit magnitude codes stored as ``q`` bit planes (the
-same physical layout as the BCQ sign planes — ``core/packing.py::pack_codes``)
-and ``(s, z)`` are per-(group, column) affine scale/zero parameters. Each grid
-step unpacks a ``(q, bk/8, bo)`` byte block to bits with VPU shift/mask ops,
-reassembles the codes as ``Σ_i 2^i·bit_i``, applies the group affine in VMEM
-registers, and feeds the MXU — the dequantized block never exists in HBM
-(the same "no dequantization overhead" requirement the BCQ kernel satisfies,
-paper §III; contrast ``kernels/dequant_mm.py``, the explicit baseline).
+``y = x @ Ŵ`` with ``Ŵ = alpha ∘ t``, ``t ∈ {-1, 0, +1}``, consumed
+**directly in packed form**: the ternary codes are stored as TWO bit planes —
+plane 0 the *sign* bit (1 → +1), plane 1 the *mask* bit (1 → nonzero) — in
+the shared physical layout (``core/packing.py``: 8 codes per byte along k,
+LSB-first), plus ONE per-(group, column) magnitude plane ``alpha``. Each grid
+step unpacks a ``(2, bk/8, bo)`` byte block with VPU shift/mask ops,
+reconstructs ``t = (2·sign − 1) · mask`` in registers, applies the group
+magnitudes, and feeds the MXU — the decoded block never exists in HBM (the
+paper's "no dequantization overhead" requirement, §III, at 2 stored bits +
+one scale per group: the sub-2-bit regime T-MAC serves BitNet-class models
+in at memory-bandwidth speed).
+
+Ternary is *masked BCQ*: ``t = 0.5·b1 + 0.5·b2`` with ``b1 = sign | ~mask``
+and ``b2 = sign & mask`` — the equivalence ``core/formats.py::TernaryFormat``
+exploits to hand self-speculation a nested 1-plane BCQ draft (``truncate``).
+This kernel is the direct 2-plane decode; the drafts run through ``bcq_mm``.
 
 Grid, accumulator and dimension semantics mirror ``bcq_mm.py``: a float32
 VMEM ``scratch_shapes`` accumulator persists across the sequential k steps,
@@ -27,44 +34,44 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_O = 256
+PLANES = 2  # sign + mask — fixed; the policy's q is not a free axis here
 
 
 def vmem_bytes(*, B: int, block_k: int, block_o: int, q: int, g: int) -> int:
     """Per-grid-step VMEM estimate (``kernels/introspect.py``): bcq_mm's
-    pipeline shape with the (2, groups, bo) affine scale/zero block and the
-    unpacked bit planes + reassembled code block the body materialises."""
+    pipeline shape with 2 packed planes, the single alpha plane, and the
+    unpacked sign/mask bits + decoded ternary block the body materialises.
+    ``q`` is accepted for the estimator protocol but the layout pins it to 2
+    packed planes / 1 scale plane."""
     from repro.kernels.introspect import scales_block_rows
 
+    del q  # ternary stores exactly 2 planes regardless of the policy's q
     groups = scales_block_rows(block_k, g)
     io = 2 * (
         B * block_k * 4  # x block, f32
-        + q * (block_k // 8) * block_o  # packed bit planes, uint8
-        + 2 * groups * block_o * 4  # (scale, zero) block (<= f32)
+        + PLANES * (block_k // 8) * block_o  # packed sign+mask planes, uint8
+        + 1 * groups * block_o * 4  # alpha block (<= f32)
         + B * block_o * 4  # out block, f32
     )
     body = (
-        q * block_k * block_o * 4  # unpacked bit planes
-        + 2 * block_k * block_o * 4  # reassembled codes + affine w_eff
+        PLANES * block_k * block_o * 4  # unpacked sign/mask bits
+        + 2 * block_k * block_o * 4  # decoded t + scaled w_eff
         + B * block_o * 4  # acc scratch
     )
     return io + body
 
 
-def _unpack_codes_block(packed: jax.Array, compute_dtype) -> jax.Array:
-    """uint8 (q, bk/8, bo) bit planes → codes (bk, bo) in compute_dtype."""
-    q, kc, bo = packed.shape
+def _decode_ternary_block(packed: jax.Array, compute_dtype) -> jax.Array:
+    """uint8 (2, bk/8, bo) sign+mask planes → t ∈ {-1, 0, +1} (bk, bo)."""
+    _, kc, bo = packed.shape
     shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, 1, 8, 1), 2)
-    bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)  # (q, kc, 8, bo)
-    planes = bits.reshape(q, kc * 8, bo).astype(compute_dtype)
-    # q is static (<= 8): unroll the weighted plane sum with Python scalar
-    # weights 2^i — Pallas kernels may not capture array constants
-    codes = planes[0]
-    for i in range(1, q):
-        codes = codes + planes[i] * (2.0**i)
-    return codes  # (bk, bo)
+    bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)  # (2, kc, 8, bo)
+    planes = bits.reshape(PLANES, kc * 8, bo).astype(compute_dtype)
+    sign = 2.0 * planes[0] - 1.0
+    return sign * planes[1]  # mask=0 zeroes the code
 
 
-def _uniform_mm_kernel(
+def _ternary_mm_kernel(
     x_ref, packed_ref, scales_ref, out_ref, acc_ref, *, g: int, bk: int, compute_dtype
 ):
     ik = pl.program_id(1)
@@ -74,18 +81,16 @@ def _uniform_mm_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = _unpack_codes_block(packed_ref[...], compute_dtype)  # (bk, bo)
-    scales = scales_ref[...].astype(compute_dtype)  # (2, bk//g or 1, bo)
-    s, z = scales[0], scales[1]
-    bk_, bo = codes.shape
+    t = _decode_ternary_block(packed_ref[...], compute_dtype)  # (bk, bo)
+    alpha = scales_ref[...].astype(compute_dtype)[0]  # (bk//g or 1, bo)
+    bk_, bo = t.shape
 
     if g <= bk:
-        # scales block carries bk//g groups — expand each over its g rows
-        w = codes.reshape(bk // g, g, bo) * s[:, None, :] + z[:, None, :]
-        w_eff = w.reshape(bk, bo)
+        # alpha block carries bk//g groups — expand each over its g rows
+        w_eff = (t.reshape(bk // g, g, bo) * alpha[:, None, :]).reshape(bk, bo)
     else:
-        # whole k-block lies inside one scale group: s/z rows are (1, bo)
-        w_eff = codes * s + z
+        # whole k-block lies inside one scale group: alpha rows are (1, bo)
+        w_eff = t * alpha
 
     x = x_ref[...].astype(compute_dtype)
     acc_ref[...] += jnp.dot(x, w_eff, preferred_element_type=jnp.float32)
@@ -95,7 +100,7 @@ def _uniform_mm_kernel(
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-def uniform_mm_call(
+def ternary_mm_call(
     x: jax.Array,
     packed: jax.Array,
     scales: jax.Array,
@@ -111,28 +116,33 @@ def uniform_mm_call(
     from repro.kernels.bcq_mm import _validate_tiling
 
     B, k = x.shape
-    q, kc, o = packed.shape
+    planes, kc, o = packed.shape
+    if planes != PLANES:
+        raise ValueError(
+            f"ternary packed tensor must carry exactly {PLANES} planes "
+            f"(sign + mask), got {planes}"
+        )
     _validate_tiling(k, o, kc, g, block_k, block_o)
 
     grid = (o // block_o, k // block_k)
     if g <= block_k:
         scales_spec = pl.BlockSpec(
-            (2, block_k // g, block_o), lambda io, ik: (0, ik, io)
+            (1, block_k // g, block_o), lambda io, ik: (0, ik, io)
         )
     else:
         scales_spec = pl.BlockSpec(
-            (2, 1, block_o), lambda io, ik: (0, ik // (g // block_k), io)
+            (1, 1, block_o), lambda io, ik: (0, ik // (g // block_k), io)
         )
 
     kernel = functools.partial(
-        _uniform_mm_kernel, g=g, bk=block_k, compute_dtype=compute_dtype
+        _ternary_mm_kernel, g=g, bk=block_k, compute_dtype=compute_dtype
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((B, block_k), lambda io, ik: (0, ik)),
-            pl.BlockSpec((q, block_k // 8, block_o), lambda io, ik: (0, ik, io)),
+            pl.BlockSpec((PLANES, block_k // 8, block_o), lambda io, ik: (0, ik, io)),
             scales_spec,
         ],
         out_specs=pl.BlockSpec((B, block_o), lambda io, ik: (0, io)),
@@ -148,7 +158,7 @@ def uniform_mm_call(
 @functools.partial(
     jax.jit, static_argnames=("g", "block_k", "block_o", "interpret", "compute_dtype")
 )
-def uniform_mm(
+def ternary_mm(
     x: jax.Array,
     packed: jax.Array,
     scales: jax.Array,
@@ -159,13 +169,13 @@ def uniform_mm(
     interpret: bool = False,
     compute_dtype=jnp.float32,
 ) -> jax.Array:
-    """x (B, k) @ uniform[(q, k/8, o) bit planes, (2, k/g, o) scale/zero] → (B, o) f32.
+    """x (B, k) @ ternary[(2, k/8, o) sign+mask planes, (1, k/g, o) alpha] → (B, o) f32.
 
     Constraints are :func:`repro.kernels.bcq_mm.bcq_mm`'s: k % block_k == 0,
     o % block_o == 0, g % 8 == 0 and (block_k % g == 0 or g % block_k == 0).
     ``ops.qmatmul`` pads inputs so callers never see these.
     """
-    return uniform_mm_call(
+    return ternary_mm_call(
         x,
         packed,
         scales,
@@ -179,4 +189,4 @@ def uniform_mm(
 
 from repro.kernels.introspect import register_vmem_estimator  # noqa: E402
 
-register_vmem_estimator("uniform_mm", vmem_bytes)
+register_vmem_estimator("ternary_mm", vmem_bytes)

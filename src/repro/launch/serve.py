@@ -20,18 +20,23 @@ t=0). ``--sequential`` instead serves the same workload as one-shot scanned
 ``generate`` calls in arrival order — the PR 1 fast path, kept as the
 baseline the scheduler is measured against (BENCH_serve.json).
 
-``--format {bcq,uniform,dequant}`` picks the registered quantization format
-(DESIGN.md §2.4): the paper's BCQ (default), FineQuant-style group-wise
-uniform int-q, or the dequantize-then-matmul baseline the paper benchmarks
-against — all three serve end-to-end through the identical scheduler/engine
-stack, so format comparisons isolate the kernel pipeline.
+``--format NAME`` picks the registered quantization format (DESIGN.md §2.4);
+the choices come straight from the registry (``core/formats.py``), so a newly
+registered format serves here with zero launcher changes: the paper's BCQ
+(default), FineQuant-style group-wise uniform int-q, the dequantize-then-
+matmul baseline the paper benchmarks against, FLUTE-style arbitrary-codebook,
+and T-MAC-style ternary — all serve end-to-end through the identical
+scheduler/engine stack, so format comparisons isolate the kernel pipeline.
 
 ``--speculate q_draft:gamma`` turns decode dispatches into self-speculative
-chunks (DESIGN.md §5): a ``q_draft``-bit truncation of the same BCQ weights
-drafts ``gamma`` tokens per chunk and the full-precision model verifies them
-in one batched forward — greedy output stays token-identical, sampled output
-follows the exact target distribution, and the draft-acceptance rate is
-reported alongside tok/s. Requests opt in per row (every CLI request opts in).
+chunks (DESIGN.md §5): a ``q_draft``-bit truncation of the same quantized
+weights drafts ``gamma`` tokens per chunk and the full-precision model
+verifies them in one batched forward — greedy output stays token-identical,
+sampled output follows the exact target distribution, and the draft-acceptance
+rate is reported alongside tok/s. Requests opt in per row (every CLI request
+opts in). Needs a truncation-capable format (``supports_truncate`` in the
+registry — ``bcq`` and ``ternary``); the launcher checks the capability flag,
+not a name list.
 
 ``--tp N`` serves tensor-parallel (DESIGN.md §7): weights are placed
 column/row-parallel over an N-way ``model`` mesh under ``shard_map``, KV
@@ -60,7 +65,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.formats import format_names
+from repro.core.formats import format_names, get_format
 from repro.data import MarkovCorpus
 from repro.infer import Engine, Request, Scheduler, SpecConfig
 from repro.models import init_params, reduced
@@ -160,12 +165,10 @@ def main() -> None:
                     help="quantization bits / code planes (0 = dense)")
     ap.add_argument("--g", type=int, default=128)
     ap.add_argument("--format", choices=format_names(), default="bcq",
-                    help="registered quantization format (core/formats.py): "
-                         "'bcq' (the paper's LUT-GEMM format, supports "
-                         "--speculate), 'uniform' (FineQuant-style group-wise "
-                         "int-q), 'dequant' (same packing as uniform served "
-                         "through the explicit dequantize-then-matmul "
-                         "baseline the paper compares against)")
+                    help="registered quantization format (core/formats.py); "
+                         "choices track the registry. 'bcq' is the paper's "
+                         "LUT-GEMM format; truncation-capable formats "
+                         "(supports_truncate) also serve --speculate")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4,
                     help="decode-batch width (concurrent requests)")
@@ -212,9 +215,11 @@ def main() -> None:
             ap.error(f"--speculate: {e}")
     if spec and not args.q:
         ap.error("--speculate requires a quantized model (--q > 0)")
-    if spec and args.format != "bcq":
+    if spec and not get_format(args.format).supports_truncate:
+        capable = [n for n in format_names() if get_format(n).supports_truncate]
         ap.error(f"--speculate needs a truncation-capable format; "
-                 f"{args.format!r} has no nested low-bit draft (use --format bcq)")
+                 f"{args.format!r} has no nested low-bit draft "
+                 f"(truncation-capable formats: {', '.join(capable)})")
     if spec and args.sequential:
         ap.error("--speculate drives the continuous-batching scheduler; "
                  "it cannot be combined with --sequential")

@@ -312,18 +312,62 @@ class TPContext:
     # -- placement ----------------------------------------------------------
 
     def _put(self, tree, specs):
+        # QuantizedTensor nodes are placed as units (packed/scales each get
+        # their spec) rather than flattened through jax.tree.map: a draft
+        # tree's statics may legitimately differ from the spec tree's —
+        # cross-format truncation re-tags leaves (ternary drafts are BCQ)
+        # and slices the plane axis, while the plane/group dim specs still
+        # apply verbatim.
+        def put(x, s):
+            if isinstance(x, QuantizedTensor):
+                return QuantizedTensor(
+                    packed=jax.device_put(
+                        x.packed, NamedSharding(self.mesh, s.packed)
+                    ),
+                    scales=jax.device_put(
+                        x.scales, NamedSharding(self.mesh, s.scales)
+                    ),
+                    g=x.g,
+                    k=x.k,
+                    o=x.o,
+                    fmt=x.fmt,
+                )
+            return jax.device_put(x, NamedSharding(self.mesh, s))
+
         return jax.tree.map(
-            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)), tree, specs
+            put, tree, specs, is_leaf=lambda x: isinstance(x, QuantizedTensor)
         )
 
     def place_params(self, params):
         """(Re-)commit a param tree to its TP sharding. Used for the params
         themselves and for ``truncate_params`` draft views — plane truncation
-        slices the q axis, never the sharded dim, so the spec tree of the full
+        slices the q axis (and may re-tag the format: ternary drafts are
+        1-plane BCQ), never the sharded dim, so the spec tree of the full
         tree applies verbatim."""
         if self.param_spec_tree is None:
             raise RuntimeError("shard_model has not placed the params yet")
         return self._put(params, self.param_spec_tree)
+
+    def _specs_like(self, params):
+        """The param spec tree with QuantizedTensor statics re-tagged to match
+        ``params``. Draft trees from cross-format truncation carry different
+        static metadata than the target tree the specs were built from
+        (ternary drafts are 1-plane BCQ) — the dim specs apply verbatim, but
+        pytree-structure-sensitive consumers (shard_map in_specs) need the
+        aux data to agree."""
+
+        def fix(s, p):
+            if isinstance(s, QuantizedTensor):
+                return QuantizedTensor(
+                    packed=s.packed, scales=s.scales, g=p.g, k=p.k, o=p.o,
+                    fmt=p.fmt,
+                )
+            return s
+
+        return jax.tree.map(
+            fix, self.param_spec_tree, params,
+            is_leaf=lambda x: isinstance(x, QuantizedTensor),
+        )
 
     def shard_cache(self, cache):
         """Place a fresh ``init_cache`` tree with kv-heads over ``model``."""
@@ -380,7 +424,7 @@ class TPContext:
         fn = shard_map(
             body,
             mesh=self.mesh,
-            in_specs=(self.param_spec_tree, cspecs)
+            in_specs=(self._specs_like(params), cspecs)
             + tuple(rep(v) for v in arr_kw.values()),
             out_specs=(P(None, None, None), cspecs, P()),
             check_vma=False,

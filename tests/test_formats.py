@@ -35,7 +35,7 @@ from repro.quant import (
 )
 
 KEY = jax.random.PRNGKey(0)
-FORMATS = ("bcq", "uniform", "dequant")
+FORMATS = ("bcq", "uniform", "dequant", "codebook", "ternary")
 
 
 def _w(rng, k=256, o=128):
@@ -140,6 +140,12 @@ def test_nbytes_accounting(rng):
         deq = quantize_tensor(w, q=q, g=g, scale_dtype=dtype, fmt="dequant")
         assert deq.nbytes() == uni.nbytes()
         np.testing.assert_array_equal(np.asarray(deq.packed), np.asarray(uni.packed))
+        # codebook: q index planes + the 2^q-entry centroid table per group
+        cbk = quantize_tensor(w, q=q, g=g, iters=1, scale_dtype=dtype, fmt="codebook")
+        assert cbk.nbytes() == q * (k // 8) * o + (2**q) * (k // g) * o * itemsize
+        # ternary: 2 fixed planes + ONE alpha plane, whatever the policy's q
+        ter = quantize_tensor(w, q=q, g=g, scale_dtype=dtype, fmt="ternary")
+        assert ter.nbytes() == 2 * (k // 8) * o + (k // g) * o * itemsize
 
 
 # ---------------------------------------------------------------------------
@@ -242,9 +248,11 @@ def test_truncate_capability_gating(rng):
     with pytest.raises(ValueError, match="truncat"):
         truncate_params(qp, 2)
     eng = Engine(cfg, qp, max_seq=32)
-    with pytest.raises(ValueError, match="bcq"):
+    # the refusal names the capable formats from the registry's capability
+    # flag (not a hardcoded list) — both bcq and ternary appear
+    with pytest.raises(ValueError, match="bcq.*ternary"):
         eng.generate(_prompts(cfg, 1, 6), 4, speculate=SpecConfig(2, 2))
-    with pytest.raises(ValueError, match="bcq"):
+    with pytest.raises(ValueError, match="truncation-capable formats"):
         eng.init_slots(2, speculate=SpecConfig(2, 2))
 
 
@@ -252,6 +260,209 @@ def test_bcq_truncate_preserves_format(rng):
     qt = quantize_tensor(_w(rng), q=4, g=64, method="greedy")
     qd = qt.truncate(2)
     assert qd.fmt == "bcq" and qd.q == 2
+
+
+# ---------------------------------------------------------------------------
+# codebook: round-trip bounds + NF4 preset
+# ---------------------------------------------------------------------------
+
+
+def test_codebook_roundtrip_error_bound(rng):
+    """k-means centroids at q=4 reconstruct a Gaussian weight to ~10% relative
+    error; error is monotone in q (more centroids never hurt)."""
+    w = _w(rng)
+    errs = {}
+    for q in (2, 4):
+        qt = quantize_tensor(
+            w, q=q, g=64, iters=4, scale_dtype=jnp.float32, fmt="codebook"
+        )
+        errs[q] = float(jnp.linalg.norm(qt.dequantize() - w) / jnp.linalg.norm(w))
+    assert errs[4] < 0.15, errs
+    assert errs[2] > errs[4], errs
+    # every reconstructed value must BE one of the group's stored centroids
+    qt = quantize_tensor(w, q=2, g=64, iters=2, scale_dtype=jnp.float32, fmt="codebook")
+    wd = np.asarray(qt.dequantize()).reshape(256 // 64, 64, 128)
+    cent = np.asarray(qt.scales)  # (4, G, o)
+    match = np.abs(wd[None] - cent[:, :, None, :])  # (4, G, g, o)
+    assert np.all(match.min(axis=0) < 1e-6)
+
+
+def test_codebook_nf4_preset(rng):
+    w = _w(rng)
+    with pytest.raises(ValueError, match="nf4.*q=4"):
+        quantize_tensor(w, q=3, g=64, method="nf4", fmt="codebook")
+    qt = quantize_tensor(w, q=4, g=64, method="nf4", scale_dtype=jnp.float32,
+                         fmt="codebook")
+    err = float(jnp.linalg.norm(qt.dequantize() - w) / jnp.linalg.norm(w))
+    assert err < 0.15
+    # the NF4 grid contains 0 and ±absmax exactly: per (group, column) the
+    # centroid table's extremes are ±max|w| and 0 is a table entry
+    cent = np.asarray(qt.scales)  # (16, G, o)
+    grouped = np.abs(np.asarray(w).reshape(256 // 64, 64, 128)).max(axis=1)
+    np.testing.assert_allclose(cent.max(axis=0), grouped, rtol=1e-6)
+    np.testing.assert_allclose(cent.min(axis=0), -grouped, rtol=1e-6)
+    assert np.all(np.abs(cent).min(axis=0) < 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# ternary: {-a, 0, +a} codes, masked-BCQ identity, nested drafts
+# ---------------------------------------------------------------------------
+
+
+def test_ternary_values_in_alphabet(rng):
+    qt = quantize_tensor(_w(rng), q=4, g=64, scale_dtype=jnp.float32, fmt="ternary")
+    assert qt.q == 2  # sign + mask planes, independent of the policy's q
+    wd = np.asarray(qt.dequantize()).reshape(256 // 64, 64, 128)
+    alpha = np.asarray(qt.scales)[0]  # (G, o)
+    is_zero = np.abs(wd) < 1e-7
+    is_alpha = np.abs(np.abs(wd) - alpha[:, None, :]) < 1e-5
+    assert np.all(is_zero | is_alpha)
+    assert is_zero.any() and is_alpha.any()  # both code classes occur
+
+
+def test_ternary_truncate_bit_identity(rng):
+    """Ternary is masked BCQ: the as_bcq view dequantizes bit-identically, and
+    truncate(1) hands speculation a genuine 1-plane BCQ draft."""
+    f = get_format("ternary")
+    qt = quantize_tensor(_w(rng), q=4, g=64, scale_dtype=jnp.float32, fmt="ternary")
+    bcq_view = f.as_bcq(qt)
+    assert bcq_view.fmt == "bcq" and bcq_view.q == 2
+    np.testing.assert_array_equal(
+        np.asarray(f.dequantize(qt)),
+        np.asarray(get_format("bcq").dequantize(bcq_view)),
+    )
+    draft = qt.truncate(1)
+    assert draft.fmt == "bcq" and draft.q == 1
+    np.testing.assert_array_equal(
+        np.asarray(draft.packed[0]), np.asarray(bcq_view.packed[0])
+    )
+    assert qt.truncate(2) is qt  # full-width view is the tensor itself
+    with pytest.raises(ValueError, match="1..2"):
+        qt.truncate(3)
+
+
+def test_ternary_speculative_decode_matches_plain():
+    """Self-speculation through the sub-1-bit nested draft: greedy tokens stay
+    bit-identical to the plain ternary engine (the acceptance criterion)."""
+    cfg = _small_cfg()
+    params = init_params(KEY, cfg)
+    qp = quantize_params(params, QuantPolicy(q=4, g=64, iters=2, fmt="ternary"))
+    eng = Engine(cfg, qp, max_seq=32)
+    prompts = _prompts(cfg, 2, 6)
+    plain = eng.generate(prompts, 8)
+    spec = eng.generate(prompts, 8, speculate=SpecConfig(1, 2))
+    np.testing.assert_array_equal(plain.tokens, spec.tokens)
+
+
+# ---------------------------------------------------------------------------
+# deploy-mode dispatch: no silent ref fallback
+# ---------------------------------------------------------------------------
+
+
+def test_deploy_mode_refuses_impl_less_format(rng):
+    """Regression (the PR 9 bugfix): under impl_mode('deploy') a registered
+    format with NO Pallas kernels used to fall through impl='auto' →
+    resolve_impl → silent ref oracle — the deploy trace priced the wrong
+    program. It must now raise, naming the format."""
+    from repro.core import formats as formats_mod
+    from repro.kernels.ops import impl_mode
+
+    class StubFormat(formats_mod.QuantFormat):
+        name = "stub-kernel-less"
+        impls = ()
+
+        def quantize(self, w, **kw):  # pragma: no cover - not reached
+            raise NotImplementedError
+
+        def dequantize(self, qt, dtype=jnp.float32):
+            return jnp.zeros((qt.k, qt.o), dtype)
+
+        def matvec(self, xb, qt, *, impl, interpret):  # pragma: no cover
+            raise NotImplementedError
+
+    formats_mod.register_format(StubFormat())
+    try:
+        base = quantize_tensor(_w(rng), q=2, g=64, fmt="uniform")
+        qt = QuantizedTensor(
+            packed=base.packed, scales=base.scales,
+            g=base.g, k=base.k, o=base.o, fmt="stub-kernel-less",
+        )
+        x = jnp.ones((1, 256), jnp.float32)
+        # outside deploy mode the stub happily serves its ref oracle
+        (y,) = qmatmul("stub-kernel-less", x, qt, impl="ref")
+        assert y.shape == (1, 128)
+        with impl_mode("deploy"):
+            with pytest.raises(ValueError, match="stub-kernel-less.*deploy"):
+                qmatmul("stub-kernel-less", x, qt)
+        # explicit impl choices still win over the mode
+        with impl_mode("deploy"):
+            (y2,) = qmatmul("stub-kernel-less", x, qt, impl="ref")
+        np.testing.assert_array_equal(np.asarray(y2), np.asarray(y))
+    finally:
+        del formats_mod._REGISTRY["stub-kernel-less"]
+
+
+# ---------------------------------------------------------------------------
+# packing edge cases + the shared scales-block-rows helper
+# ---------------------------------------------------------------------------
+
+
+def test_pack_codes_ragged_k_raises(rng):
+    codes = jnp.asarray(rng.integers(0, 4, (60, 16)), jnp.uint8)  # k % 8 != 0
+    with pytest.raises(ValueError, match="multiple of 8"):
+        pack_codes(codes, 2)
+
+
+def test_scales_block_rows_matches_kernel_blockspecs():
+    """The shared helper IS the scales-rows rule every kernel's BlockSpec
+    encodes (g <= block_k → block_k//g rows; g > block_k → 1 row), checked
+    across every (block_k, g) pair the tiling validator admits — so the VMEM
+    estimators and the kernels can never disagree on the scales block."""
+    from repro.kernels.introspect import scales_block_rows
+
+    checked = 0
+    for block_k in (64, 128, 256, 512, 1024):
+        for g in (8, 16, 24, 48, 64, 128, 256, 512, 2048):
+            if g % 8 or not (block_k % g == 0 or g % block_k == 0):
+                continue  # the kernels' _validate_tiling rejects these
+            expected = block_k // g if g <= block_k else 1
+            assert scales_block_rows(block_k, g) == expected, (block_k, g)
+            checked += 1
+    assert checked > 10
+
+
+@pytest.mark.parametrize("fmt", ("codebook", "ternary"))
+def test_new_format_kernel_matches_ref_group_spans_blocks(rng, fmt):
+    """g > block_k: one scale group spans several k-blocks — the (S, 1, bo)
+    BlockSpec arm, pinned explicitly via block_k=128 against g=512."""
+    from repro.kernels.codebook_mm import codebook_mm
+    from repro.kernels.ternary_mm import ternary_mm
+
+    w = _w(rng, 512, 128)
+    x = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
+    qt = quantize_tensor(
+        w, q=2, g=512, iters=2, scale_dtype=jnp.float32, fmt=fmt
+    )
+    (y_ref,) = qmatmul(fmt, x, qt, impl="ref")
+    fn = {"codebook": codebook_mm, "ternary": ternary_mm}[fmt]
+    y = fn(x, qt.packed, qt.scales, g=512, block_k=128, block_o=128,
+           interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("fmt", ("codebook", "ternary"))
+def test_new_format_tp_specs(rng, fmt):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import decode_tp_axes
+
+    ax = decode_tp_axes(2)
+    qt = quantize_tensor(_w(rng, 256, 128), q=2, g=64, iters=1, fmt=fmt)
+    spec = get_format(fmt).tp_specs(P("model", None), qt, ax)
+    assert spec.fmt == fmt
+    # k/8 = 32 and k/g = 4 both divide tp=2 → packed AND scales shard with k
+    assert tuple(spec.packed) == (None, "model", None)
+    assert tuple(spec.scales) == (None, "model", None)
 
 
 # ---------------------------------------------------------------------------
@@ -291,7 +502,14 @@ def test_mixed_format_model_decodes():
 def test_quantized_structs_per_format():
     cfg = _small_cfg()
     structs = jax.eval_shape(lambda: init_params(KEY, cfg))
-    for fmt, s_lead in (("bcq", 4), ("uniform", 2), ("dequant", 2)):
+    # (fmt, packed planes at policy q=4, scales lead dim)
+    for fmt, planes, s_lead in (
+        ("bcq", 4, 4),
+        ("uniform", 4, 2),
+        ("dequant", 4, 2),
+        ("codebook", 4, 16),
+        ("ternary", 2, 1),  # ternary stores 2 planes whatever q says
+    ):
         qs = quantized_structs(structs, QuantPolicy(q=4, g=64, fmt=fmt))
         leaves = [
             l
@@ -303,7 +521,7 @@ def test_quantized_structs_per_format():
         assert leaves, fmt
         for qt in leaves:
             assert qt.fmt == fmt
-            assert qt.packed.shape[-3] == 4
+            assert qt.packed.shape[-3] == planes
             assert qt.packed.shape[-2] == qt.k // 8
             assert qt.scales.shape[-3] == s_lead
 

@@ -199,7 +199,8 @@ def test_trace_once_harness():
 
 def test_vmem_estimators_registered():
     assert set(introspect.known_impls()) >= {
-        "bcq_mm", "lutgemm", "uniform_mm", "dequant_mm"
+        "bcq_mm", "lutgemm", "uniform_mm", "dequant_mm", "codebook_mm",
+        "ternary_mm",
     }
     for impl in introspect.known_impls():
         small = introspect.vmem_bytes(impl, B=8, block_k=128, block_o=128, q=3, g=128)

@@ -236,6 +236,37 @@ def test_speculative_greedy_identical(q, q_draft, tp):
     assert out.spec_stats["chunks"] >= 1
 
 
+@functools.lru_cache(maxsize=None)
+def _fmt_params(fmt: str):
+    return quantize_params(
+        init_params(KEY, _cfg()), QuantPolicy(q=3, g=Q_GROUP, iters=2, fmt=fmt)
+    )
+
+
+@pytest.mark.parametrize("tp", [1, 2])
+@pytest.mark.parametrize("fmt", ["codebook", "ternary"])
+def test_new_format_tp_greedy_identical(fmt, tp):
+    """The PR 9 formats shard through the same generic tp_specs rule: greedy
+    tokens on a 1- and 2-way mesh stay bit-identical to the plain engine."""
+    qp = _fmt_params(fmt)
+    ref = Engine(_cfg(), qp, max_seq=MAX_SEQ).generate(_prompts(), N_STEPS)
+    out = Engine(_cfg(), qp, max_seq=MAX_SEQ, mesh=make_tp_mesh(tp)).generate(
+        _prompts(), N_STEPS
+    )
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+
+
+def test_ternary_speculative_tp_greedy_identical():
+    """Ternary self-speculation (the nested 1-plane BCQ draft from the
+    masked-BCQ identity) on a sharded engine reproduces plain greedy."""
+    qp = _fmt_params("ternary")
+    ref = Engine(_cfg(), qp, max_seq=MAX_SEQ).generate(_prompts(), N_STEPS)
+    out = Engine(_cfg(), qp, max_seq=MAX_SEQ, mesh=make_tp_mesh(2)).generate(
+        _prompts(), N_STEPS, speculate=SpecConfig(q_draft=1, gamma=2)
+    )
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+
+
 def test_speculative_slot_scheduler_tp():
     """Speculative continuous batching (draft cache + pending tokens all
     sharded) against single-device solo greedy."""
