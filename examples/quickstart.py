@@ -66,6 +66,29 @@ request's tokens stay bit-identical to an undisturbed run::
                     stream.cancel("lost interest")   # slot reclaimed next chunk
     asyncio.run(demo())
 
+Serving traffic that repeats a system prompt gets a prefix cache
+(DESIGN.md §12): a radix trie over committed token prefixes shares
+device-resident KV blocks across requests, so a warm hit prefills only the
+uncached tail — in bucket-padded chunks, so long prompts neither retrace XLA
+per length nor block short neighbours' decode — while served tokens stay
+bit-identical to cold solo ``generate`` across formats, speculation and TP::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \\
+        --q 4 --g 128 --requests 12 --slots 4 \\
+        --prefix-cache-mb 64 --prefix-block 8 --shared-prefix-len 24
+
+    from repro.infer import PrefixCache
+    eng = Engine(cfg, params, max_seq=64,
+                 prefix_cache=PrefixCache(block_tokens=8))
+    sched = Scheduler(eng, n_slots=4, prefill_chunk=8)  # chunked prefill
+    ...
+    print(eng.prefix_cache.stats())   # hits/misses/evictions, cached bytes
+
+The WebSocket server takes ``--prefix-cache-mb``/``--prefill-chunk`` too and
+also speaks SSE: ``POST /v1/generate`` streams the same accepted/tokens/done
+frames as ``data:`` events for plain-HTTP clients (curl works; disconnect
+cancels the request, exactly like a dropped socket).
+
 Everything above is observable (DESIGN.md §11): attach `repro.obs`'s span
 tracer + metrics registry to any scheduler and serving stays bit-identical
 while every request lifecycle, decode chunk and kernel dispatch is recorded

@@ -92,6 +92,72 @@ def trace_once_check(fmts: Sequence[str] = ("dense", "bcq")) -> Tuple[int, List[
     return len(fmts), violations
 
 
+def chunked_prefill_trace_check() -> Tuple[int, List[Violation]]:
+    """Chunked prefill compiles once per chunk *bucket*, never per prompt
+    length (DESIGN.md §12). The historical bug this pins down: whole-shot
+    admission retraces ``_prefill`` for every distinct prompt length, so a
+    serving mix of lengths pays compile on nearly every admission. Bucketed
+    chunk padding is the fix — this check drives admissions over many
+    distinct prompt lengths through one chunked-prefill scheduler and
+    asserts ``_prefill_chunk``'s compile cache stays bounded by the bucket
+    set actually touched (start positions/lengths ride as traced scalars)."""
+    import numpy as np
+
+    from repro.infer.prefix_cache import PrefixCache
+    from repro.infer.scheduler import Request, Scheduler
+
+    eng, _ = _reduced_engine("dense")
+    eng.prefix_cache = PrefixCache(block_tokens=8, max_bytes=32 << 20)
+    eng.prefix_cache.bind("trace-once-harness")
+    sched = Scheduler(eng, n_slots=2, chunk=2, prefill_chunk=8)
+    rng = np.random.default_rng(0)
+    # 9 distinct prompt lengths spanning several buckets — whole-shot
+    # admission would compile 9 prefill entries for these. Most share a
+    # 16-token prefix so the warm install path (row buckets) exercises too.
+    shared = rng.integers(0, eng.cfg.vocab, size=16).astype(np.int32)
+    tails = [3, 5, 7, 9, 12, 17, 23]
+    prompts = [np.array([1, 2, 3], np.int32), np.array([4, 5, 6, 7, 8], np.int32)]
+    prompts += [
+        np.concatenate(
+            [shared, rng.integers(0, eng.cfg.vocab, size=t).astype(np.int32)]
+        )
+        for t in tails
+    ]
+    for i, prompt in enumerate(prompts):
+        sched.submit(Request(prompt=prompt, max_new_tokens=2, seed=i))
+    sched.run()
+    violations: List[Violation] = []
+    # buckets a <=8-token chunk can pad to: {8} plus exact tail lengths only
+    # when the bucket would overrun max_seq (never here: 39 + 8 <= 64)
+    budget = 1
+    size = eng._prefill_chunk._cache_size()
+    if size > budget:
+        violations.append(
+            Violation(
+                "transfers/chunked-prefill-trace",
+                "engine[dense]._prefill_chunk",
+                f"compile cache holds {size} entries after admissions over "
+                f"{len(prompts)} distinct prompt lengths with prefill_chunk=8 "
+                f"— expected <= {budget} (one per touched bucket): chunk "
+                "padding is leaking a per-length shape or a non-weak static",
+            )
+        )
+    # the row-install path buckets the same way (prefix hits pad to the
+    # match bucket); with block_tokens=8 and these lengths only the 8- and
+    # 16-row buckets can appear
+    isize = eng._install_rows._cache_size()
+    if isize > 2:
+        violations.append(
+            Violation(
+                "transfers/chunked-prefill-trace",
+                "engine[dense]._install_rows",
+                f"prefix-row install compiled {isize} entries — expected <= 2 "
+                "(row buckets 8 and 16): pad_rows is not bucketing",
+            )
+        )
+    return 1, violations
+
+
 def run(cells: Sequence[TraceCell], *, trace_once: bool = True) -> PassResult:
     result = PassResult("transfers", checked=len(cells))
     for cell in cells:
@@ -100,6 +166,9 @@ def run(cells: Sequence[TraceCell], *, trace_once: bool = True) -> PassResult:
         n, vs = trace_once_check()
         result.checked += n
         result.violations.extend(vs)
+        n2, vs2 = chunked_prefill_trace_check()
+        result.checked += n2
+        result.violations.extend(vs2)
     else:
         result.skipped.append("trace-once: disabled by caller")
     return result

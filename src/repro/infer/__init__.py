@@ -2,9 +2,10 @@
 plus the continuous-batching serving layer (slot-based scheduler),
 self-speculative decoding from nested BCQ precisions (DESIGN.md §5), and the
 request-lifecycle robustness layer (DESIGN.md §9): per-request state machine,
-cancellation/deadlines/backpressure, NaN quarantine, fault injection."""
+cancellation/deadlines/backpressure, NaN quarantine, fault injection; plus
+the prefix-cache KV-reuse + chunked-prefill subsystem (DESIGN.md §12)."""
 
-from repro.infer.engine import Engine
+from repro.infer.engine import Engine, PendingAdmission
 from repro.infer.faults import FaultPlan, InjectedFault, StepClock
 from repro.infer.lifecycle import (
     QueueFullError,
@@ -13,6 +14,7 @@ from repro.infer.lifecycle import (
     TransitionError,
     latency_summary,
 )
+from repro.infer.prefix_cache import PrefixCache, PrefixHandle, model_identity
 from repro.infer.scheduler import (
     Completion,
     DispatchError,
@@ -23,6 +25,10 @@ from repro.infer.speculative import SpecConfig
 
 __all__ = [
     "Engine",
+    "PendingAdmission",
+    "PrefixCache",
+    "PrefixHandle",
+    "model_identity",
     "Scheduler",
     "Request",
     "Completion",

@@ -45,8 +45,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.infer.speculative import SpecConfig, freeze_inactive, spec_chunk
+from repro.infer.prefix_cache import (
+    PrefixHandle,
+    concat_rows,
+    model_identity,
+    pad_rows,
+)
+from repro.infer.speculative import (
+    SpecConfig,
+    freeze_inactive,
+    has_recurrent_state,
+    has_ring_buffer,
+    select_recurrent_target,
+    spec_chunk,
+)
 from repro.models import forward, fuse_decode_projections, init_cache
+from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.quant import truncate_params
 
@@ -84,6 +98,49 @@ def stop_positions_for(new_tokens: np.ndarray, stop_tokens) -> np.ndarray:
     return np.where(hits.any(axis=1), first, -1).astype(np.int32)
 
 
+@dataclasses.dataclass
+class PendingAdmission:
+    """Multi-step admission state (chunked prefill, DESIGN.md §12).
+
+    ``Engine.begin_admission`` creates one (consulting the prefix cache and
+    installing any matched prefix), ``advance_admission`` runs prefill
+    forward by a token budget per call — which is what lets the scheduler
+    interleave long-prompt admissions with decode chunks — and
+    ``finish_admission`` captures the commit payload and installs the slot.
+    ``admit_slot`` is the synchronous composition of the three.
+    """
+
+    prompt: jax.Array            # (1, plen) int32, device
+    plen: int
+    max_new_tokens: int
+    temperature: float
+    seed: int
+    speculate: bool              # per-request opt-in (spec slot batches)
+    needs_draft: bool            # the slot batch is speculative
+    chunked: bool                # bucket-padded chunk dispatches
+    whole: bool                  # single whole-prompt prefill dispatch
+    collect: bool                # capture recurrent stacks for prefix commit
+    handle: Optional[PrefixHandle] = None
+    pos: int = 0                 # target prompt tokens consumed so far
+    cache1: object = None        # evolving batch-1 target cache
+    logits1: object = None       # (1, V) last-token logits once target done
+    # (start_pos, collect_states cache) per collect dispatch — recurrent
+    # boundary snapshots for prefix commit are selected out of these
+    stack_segments: list = dataclasses.field(default_factory=list)
+    dcache1: object = None       # batch-1 draft cache (spec mode)
+    prefill_chunks: int = 0      # dispatches so far (lifecycle stamp)
+
+    @property
+    def target_done(self) -> bool:
+        return self.logits1 is not None
+
+    @property
+    def done(self) -> bool:
+        return self.target_done and (
+            not self.needs_draft or self.dcache1 is not None
+        )
+
+
 def _sample(logits: jax.Array, key: jax.Array, temperature, greedy: bool) -> jax.Array:
     """(B, V) f32 logits → (B,) int32 tokens, on device.
 
@@ -110,6 +167,7 @@ class Engine:
         fuse: bool = True,
         mesh=None,
         tracer=None,
+        prefix_cache=None,
     ):
         """``embed_fn(tokens (B,1) int32) → (B,1,D)`` is required for
         embedding-input (modality-stub) models to feed sampled codes back in —
@@ -133,7 +191,15 @@ class Engine:
         nor the tokens (tests/test_obs.py). Per-op device timing needs a
         ``jax.profiler.trace`` capture (``launch/serve.py --profile-dir``);
         the :func:`jax.profiler.TraceAnnotation` scopes emitted here label
-        those captures."""
+        those captures.
+
+        ``prefix_cache`` (a :class:`repro.infer.prefix_cache.PrefixCache`)
+        turns on prompt-prefix KV reuse for the slot-batched admission path
+        (DESIGN.md §12): ``admit_slot`` consults it, installs matched prefix
+        rows instead of recomputing them, and commits the prompt's prefix
+        back on success. Tokens are bit-identical to cold-cache admission.
+        Requires a tokens-input, non-VLM, non-MoE model (the same gate as
+        slot-batched serving)."""
         self.cfg = cfg
         self.tracer = tracer
         self.params = fuse_decode_projections(cfg, params) if fuse else params
@@ -470,6 +536,95 @@ class Engine:
         self._draft_params: dict = {}  # q_draft -> truncated param tree
         self._slot_spec: Optional[SpecConfig] = None  # set by init_slots
 
+        # -- prefix-cache KV reuse + chunked prefill (DESIGN.md §12) --------
+
+        def _prefill_chunk(params, tokens, cache, pos, last_idx):
+            """One suffix-prefill chunk: `s` fresh tokens mid-sequence against
+            a filled cache — the speculative-verify mechanism (`chunked_decode`)
+            reused for prefill, so every token attends the installed prefix
+            rows plus its intra-chunk predecessors. Returns the (1, V) logits
+            of the token at `last_idx`: the last REAL token when the chunk is
+            bucket-padded (pad tokens sit at later positions, which causal
+            masks make invisible to it)."""
+            logits, cache, _ = fwd(
+                params, tokens=tokens, cache=cache, pos=pos,
+                logits_mode="all", chunked_decode=True,
+            )
+            last = jax.lax.dynamic_index_in_dim(
+                logits, last_idx, axis=1, keepdims=False
+            )
+            return last, cache
+
+        def _prefill_collect(params, tokens, cache):
+            """Whole-prompt prefill that additionally returns recurrent state
+            stacked over the time axis (``collect_states``) so prefix commit
+            can snapshot the state at block boundaries. Logits and cache rows
+            are bit-identical to `_prefill` — collect changes only what the
+            recurrent blocks *return*, not what they compute."""
+            logits, cache, _ = fwd(
+                params, tokens=tokens, cache=cache, pos=jnp.int32(0),
+                logits_mode="last", collect_states=True,
+            )
+            return logits[:, -1], cache
+
+        def _suffix_collect(params, tokens, cache, pos, last_idx):
+            """`_prefill_chunk` with recurrent-state collection (warm-hit
+            suffix prefill on a recurrent architecture that also commits)."""
+            logits, cache, _ = fwd(
+                params, tokens=tokens, cache=cache, pos=pos,
+                logits_mode="all", chunked_decode=True, collect_states=True,
+            )
+            last = jax.lax.dynamic_index_in_dim(
+                logits, last_idx, axis=1, keepdims=False
+            )
+            return last, cache
+
+        self.prefill_chunk_fn = _prefill_chunk  # staticcheck traces this raw
+        self._prefill_chunk = jax.jit(_prefill_chunk)  # staticcheck: jit-ok(pytree statics; no donation — the evolving cache is also the commit-gather source)
+        self._prefill_collect = jax.jit(_prefill_collect)  # staticcheck: jit-ok(pytree statics; same non-donation rationale as _prefill)
+        self._suffix_collect = jax.jit(_suffix_collect)  # staticcheck: jit-ok(pytree statics; recurrent-only path, cold at serving scale)
+        self._install_rows = jax.jit(L.install_prefix_rows)  # staticcheck: jit-ok(no donation — the batch-1 unit-cache template is reused across admissions)
+        self._install_recurrent = jax.jit(L.install_recurrent)  # staticcheck: jit-ok(same template-reuse rationale as _install_rows)
+        self._gather_block = jax.jit(
+            L.gather_prefix_rows, static_argnums=(2,)
+        )
+        self._final_recurrent = jax.jit(select_recurrent_target)  # staticcheck: jit-ok(tiny per-leaf select; nothing to donate or mark static)
+        self._boundary_snap = jax.jit(  # staticcheck: jit-ok(tiny select+snapshot; nothing to donate or mark static)
+            lambda vc, idx: L.snapshot_recurrent(select_recurrent_target(vc, idx))
+        )
+
+        self.prefix_cache = prefix_cache
+        self._prefix_ok = (
+            cfg.input_kind == "tokens" and cfg.family != "vlm"
+            and not cfg.n_experts
+        )
+        self._has_recurrent = has_recurrent_state(cfg)
+        self._has_ring = has_ring_buffer(cfg)
+        # Bucket-padded chunks need pad-token writes to be DEAD rows (the
+        # write-before-read contract): ring buffers wrap pad writes onto live
+        # rows and recurrent state folds pad tokens irreversibly, so those
+        # architectures fall back to exact-length dispatches (correct, but
+        # retraces per length — hence supports_chunked_prefill is False).
+        self._chunkable = (
+            self._prefix_ok and not self._has_recurrent and not self._has_ring
+        )
+        if prefix_cache is not None:
+            if not self._prefix_ok:
+                raise ValueError(
+                    "prefix_cache requires a tokens-input, non-VLM, non-MoE "
+                    "model (the slot-batched serving gate, DESIGN.md §4)"
+                )
+            prefix_cache.bind(model_identity(cfg, self.params, mesh))
+        # pow-of-2 chunk/prefix buckets: one compile-cache entry per bucket
+        # instead of one per prompt length (staticcheck trace-once proof)
+        buckets, bkt = [], 8
+        while bkt < max_seq:
+            buckets.append(bkt)
+            bkt *= 2
+        buckets.append(max_seq)
+        self.chunk_buckets = tuple(dict.fromkeys(buckets))
+        self._last_prefix_handle: Optional[PrefixHandle] = None
+
     def _obs_scope(self, name: str, **args):
         """Host-side observability scope around one engine dispatch: a tracer
         span on the ``engine`` lane (when a tracer is attached and enabled)
@@ -606,6 +761,274 @@ class Engine:
             slots["draft_keys"] = jnp.zeros((n_slots, 2), jnp.uint32)
         return slots
 
+    # -- admission (whole-shot, prefix-cached, or chunked) -------------------
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when bucket-padded chunked prefill is available: tokens-input,
+        non-VLM/MoE, and neither ring-buffer (pad writes wrap onto live rows)
+        nor recurrent (state folds pad tokens) architectures."""
+        return self._chunkable
+
+    def _bucket_for(self, pos: int, n: int) -> int:
+        """Smallest chunk bucket holding ``n`` rows starting at ``pos``.
+        Falls back to exact ``n`` near the cache end: a padded write there
+        would make ``dynamic_update_slice`` CLAMP its start index and corrupt
+        earlier rows (the §12 tail guard)."""
+        for b in self.chunk_buckets:
+            if b >= n and pos + b <= self.max_seq:
+                return b
+        return n
+
+    def begin_admission(
+        self,
+        prompt_tokens,
+        *,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+        speculate: bool = True,
+        chunked: bool = False,
+    ) -> PendingAdmission:
+        """Start one slot admission: validate, consult the prefix cache, and
+        install any matched prefix into a fresh batch-1 cache. Returns a
+        :class:`PendingAdmission` to be driven by :meth:`advance_admission`
+        and installed by :meth:`finish_admission` (or released by
+        :meth:`abort_admission` on any failure/cancel in between).
+
+        ``chunked=True`` makes :meth:`advance_admission` dispatch bucket-
+        padded fixed-budget chunks (requires :attr:`supports_chunked_prefill`)
+        so the scheduler can interleave long-prompt prefill with decode.
+        """
+        prompt = jnp.asarray(prompt_tokens, jnp.int32).reshape(1, -1)
+        plen = int(prompt.shape[1])
+        spec = self._slot_spec
+        headroom = 0 if spec is None else spec.gamma + 1
+        if plen + max_new_tokens + headroom > self.max_seq:
+            raise ValueError(
+                f"prompt_len({plen}) + max_new_tokens({max_new_tokens})"
+                f"{f' + speculation headroom({headroom})' if headroom else ''} "
+                f"exceeds max_seq={self.max_seq}"
+            )
+        if chunked and not self._chunkable:
+            raise ValueError(
+                "chunked prefill is unsupported for this architecture "
+                "(ring-buffer/recurrent/MoE/VLM — see "
+                "Engine.supports_chunked_prefill)"
+            )
+        if self._unit_cache is None:
+            # one zeroed batch-1 cache per engine: _prefill is purely
+            # functional (no donation), so the template is reusable and the
+            # admission hot path skips a full max_seq cache alloc+zero
+            self._unit_cache = self._make_cache(1)
+        handle, pos, cache1, collect = None, 0, None, False
+        if self.prefix_cache is not None:
+            # at least the last prompt token must prefill (decode needs its
+            # logits); ring caps both match and commit at the window — rows
+            # past it wrapped during prefill and are not at their positions
+            # ring guard: rows sit at their absolute positions only until
+            # the buffer wraps (plen > window) — beyond that neither gather
+            # nor install sees rows where the trie thinks they are, and a
+            # warm suffix dispatch would wrap its own writes onto rows its
+            # early tokens attend (the spec-gamma hazard). Prompts past the
+            # window bypass the cache entirely (cold whole-shot prefill,
+            # which handles the wrap natively).
+            wrapped = self._has_ring and plen > min(self.max_seq, self.cfg.window)
+            max_match = 0 if wrapped else plen - 1
+            max_commit = 0 if wrapped else plen
+            handle = self.prefix_cache.begin(
+                prompt_tokens, max_match=max_match, max_commit=max_commit
+            )
+            try:
+                if handle.length:
+                    rows = concat_rows([nd.rows for nd in handle.matched])
+                    total = (
+                        self._bucket_for(0, handle.length)
+                        if self._chunkable else handle.length
+                    )
+                    with self._obs_scope(
+                        "engine/prefix_install", hit_tokens=handle.length,
+                        padded=total,
+                    ):
+                        cache1 = self._install_rows(
+                            self._unit_cache, pad_rows(rows, total)
+                        )
+                        if self._has_recurrent:
+                            snap = handle.matched[-1].snap
+                            assert snap is not None, (
+                                "recurrent prefix block committed without a "
+                                "boundary snapshot"
+                            )
+                            cache1 = self._install_recurrent(cache1, snap)
+                    pos = handle.length
+                collect = self._has_recurrent and bool(handle.new_spans)
+            except Exception:
+                self.prefix_cache.abort(handle)
+                raise
+        return PendingAdmission(
+            prompt=prompt, plen=plen, max_new_tokens=max_new_tokens,
+            temperature=temperature, seed=seed, speculate=speculate,
+            needs_draft=spec is not None, chunked=chunked,
+            whole=(not chunked) and pos == 0, collect=collect,
+            handle=handle, pos=pos, cache1=cache1,
+        )
+
+    def _advance_once(self, p: PendingAdmission, left: Optional[int]) -> int:
+        """One admission dispatch; returns prompt tokens consumed (the draft
+        prefill counts its full prompt — it is always whole-shot, see
+        :meth:`advance_admission`)."""
+        if not p.target_done:
+            if p.whole:
+                with self._obs_scope("engine/prefill", prompt_len=p.plen):
+                    if p.collect:
+                        p.logits1, vc = self._prefill_collect(
+                            self.params, p.prompt, self._unit_cache
+                        )
+                        p.stack_segments.append((0, vc))
+                        p.cache1 = self._final_recurrent(
+                            vc, jnp.full((1,), p.plen - 1, jnp.int32)
+                        )
+                    else:
+                        logits, p.cache1 = self._prefill(
+                            self.params, p.prompt, None, self._unit_cache
+                        )
+                        p.logits1 = logits[:, -1]
+                p.pos = p.plen
+                p.prefill_chunks += 1
+                return p.plen
+            n = p.plen - p.pos
+            if left is not None:
+                n = min(n, left)
+            if p.chunked:
+                n = min(n, self.chunk_buckets[-1])
+            b = self._bucket_for(p.pos, n) if p.chunked else n
+            chunk = p.prompt[:, p.pos : p.pos + n]
+            if b > n:
+                chunk = jnp.pad(chunk, ((0, 0), (0, b - n)))
+            cache = p.cache1 if p.cache1 is not None else self._unit_cache
+            with self._obs_scope(
+                "engine/prefill_chunk", pos=p.pos, n_tokens=n, padded=b
+            ):
+                if p.collect:
+                    last, vc = self._suffix_collect(
+                        self.params, chunk, cache, jnp.int32(p.pos),
+                        jnp.int32(n - 1),
+                    )
+                    p.stack_segments.append((p.pos, vc))
+                    p.cache1 = self._final_recurrent(
+                        vc, jnp.full((1,), n - 1, jnp.int32)
+                    )
+                else:
+                    last, p.cache1 = self._prefill_chunk(
+                        self.params, chunk, cache, jnp.int32(p.pos),
+                        jnp.int32(n - 1),
+                    )
+            p.pos += n
+            p.prefill_chunks += 1
+            if p.pos >= p.plen:
+                p.logits1 = last
+            return n
+        spec = self._slot_spec
+        with self._obs_scope(
+            "engine/prefill_draft", prompt_len=p.plen, q_draft=spec.q_draft
+        ):
+            _, p.dcache1 = self._prefill(
+                self.draft_params(spec.q_draft), p.prompt, None,
+                self._unit_cache,
+            )
+        return p.plen
+
+    def advance_admission(
+        self, pending: PendingAdmission, budget: Optional[int] = None
+    ) -> int:
+        """Run the pending prefill forward by up to ``budget`` prompt tokens
+        (``None`` = to completion); returns tokens consumed. The scheduler
+        calls this once per step with its chunk budget, interleaved with
+        decode dispatches.
+
+        The speculative draft prefill is always whole-shot (its prompt in one
+        dispatch, charged entirely to the step it runs in): the draft cache
+        has no prefix blocks to reuse, and splitting it would double the
+        chunk machinery for a path whose forward is already the cheap
+        ``q_draft``-bit truncation."""
+        consumed = 0
+        while not pending.done:
+            left = None if budget is None else budget - consumed
+            if left is not None and left <= 0:
+                break
+            consumed += self._advance_once(pending, left)
+        return consumed
+
+    def finish_admission(
+        self, slots: dict, slot: int, pending: PendingAdmission
+    ) -> dict:
+        """Install a completed admission into ``slot`` and commit the
+        prompt's prefix blocks back to the cache (gathered from the final
+        batch-1 cache under ref-count; commit happens only after a
+        successful install, so a failed install aborts instead)."""
+        p = pending
+        if not p.done:
+            raise ValueError(
+                "admission is not finished — drive advance_admission until "
+                "pending.done before finish_admission"
+            )
+        h = p.handle
+        if h is not None and h.new_spans and not h.closed and not h.rows:
+            bt = self.prefix_cache.block_tokens
+            for s, e in h.new_spans:
+                h.rows.append(self._gather_block(p.cache1, jnp.int32(s), bt))
+                if self._has_recurrent:
+                    st, vc = next(
+                        seg for seg in reversed(p.stack_segments)
+                        if seg[0] < e
+                    )
+                    h.snaps.append(
+                        self._boundary_snap(
+                            vc, jnp.full((1,), e - 1 - st, jnp.int32)
+                        )
+                    )
+                else:
+                    h.snaps.append(None)
+        greedy = p.temperature <= 0
+        args = (
+            jnp.int32(p.plen),
+            jnp.int32(p.max_new_tokens),
+            jnp.float32(p.temperature if not greedy else 1.0),
+            jnp.bool_(greedy),
+        )
+        if self._slot_spec is None:
+            with self._obs_scope("engine/admit", slot=slot):
+                out = self._admit(
+                    slots, jnp.int32(slot), p.cache1, p.logits1,
+                    jax.random.PRNGKey(p.seed), *args,
+                )
+        else:
+            with self._obs_scope("engine/admit", slot=slot, spec=True):
+                out = self._admit_spec(
+                    slots, jnp.int32(slot), p.cache1, p.dcache1, p.logits1,
+                    jax.random.PRNGKey(p.seed),
+                    jax.random.PRNGKey(p.seed ^ 0x5BEC),
+                    *args, jnp.bool_(p.speculate),
+                )
+        if h is not None:
+            self.prefix_cache.complete(h)
+        self._last_prefix_handle = h
+        return out
+
+    def abort_admission(self, pending: Optional[PendingAdmission]) -> None:
+        """Release a pending admission that will never finish (cancel,
+        deadline, prefill fault): unpins its prefix handle without
+        committing. Safe to call with ``None`` or repeatedly."""
+        if pending is not None and pending.handle is not None:
+            self.prefix_cache.abort(pending.handle)
+
+    def take_prefix_handle(self) -> Optional[PrefixHandle]:
+        """Pop the (already committed/closed) prefix handle of the most
+        recent ``admit_slot``/``finish_admission`` — the scheduler reads hit
+        stats off it for lifecycle stamps and trace instants."""
+        h, self._last_prefix_handle = self._last_prefix_handle, None
+        return h
+
     def admit_slot(
         self,
         slots: dict,
@@ -624,6 +1047,13 @@ class Engine:
         the exact token stream a solo `generate(prompt, max_new_tokens,
         temperature=..., seed=...)` would.
 
+        With a ``prefix_cache`` attached, the longest committed prefix of the
+        prompt is installed from cached rows and only the suffix prefills —
+        tokens stay bit-identical to the cold path (DESIGN.md §12); the
+        prompt's own prefix blocks are committed back on success. This is
+        the synchronous composition of ``begin_admission`` →
+        ``advance_admission`` → ``finish_admission``.
+
         In speculative slot batches (``init_slots(speculate=...)``) the draft
         model is prefilled too and the request's FIRST token is sampled at
         admission (recorded in ``slots["t_pend"][slot]`` and counted against
@@ -631,51 +1061,16 @@ class Engine:
         request out per-row: it decodes one plain target token per chunk with
         its solo-identical PRNG stream.
         """
-        prompt = jnp.asarray(prompt_tokens, jnp.int32).reshape(1, -1)
-        plen = int(prompt.shape[1])
-        spec = self._slot_spec
-        headroom = 0 if spec is None else spec.gamma + 1
-        if plen + max_new_tokens + headroom > self.max_seq:
-            raise ValueError(
-                f"prompt_len({plen}) + max_new_tokens({max_new_tokens})"
-                f"{f' + speculation headroom({headroom})' if headroom else ''} "
-                f"exceeds max_seq={self.max_seq}"
-            )
-        if self._unit_cache is None:
-            # one zeroed batch-1 cache per engine: _prefill is purely
-            # functional (no donation), so the template is reusable and the
-            # admission hot path skips a full max_seq cache alloc+zero
-            self._unit_cache = self._make_cache(1)
-        with self._obs_scope("engine/prefill", prompt_len=plen, slot=slot):
-            logits, cache1 = self._prefill(
-                self.params, prompt, None, self._unit_cache
-            )
-        greedy = temperature <= 0
-        args = (
-            jnp.int32(plen),
-            jnp.int32(max_new_tokens),
-            jnp.float32(temperature if not greedy else 1.0),
-            jnp.bool_(greedy),
+        pending = self.begin_admission(
+            prompt_tokens, max_new_tokens=max_new_tokens,
+            temperature=temperature, seed=seed, speculate=speculate,
         )
-        if spec is None:
-            with self._obs_scope("engine/admit", slot=slot):
-                return self._admit(
-                    slots, jnp.int32(slot), cache1, logits[:, -1],
-                    jax.random.PRNGKey(seed), *args,
-                )
-        with self._obs_scope(
-            "engine/prefill_draft", prompt_len=plen, slot=slot,
-            q_draft=spec.q_draft,
-        ):
-            _, dcache1 = self._prefill(
-                self.draft_params(spec.q_draft), prompt, None, self._unit_cache
-            )
-        with self._obs_scope("engine/admit", slot=slot, spec=True):
-            return self._admit_spec(
-                slots, jnp.int32(slot), cache1, dcache1, logits[:, -1],
-                jax.random.PRNGKey(seed), jax.random.PRNGKey(seed ^ 0x5BEC),
-                *args, jnp.bool_(speculate),
-            )
+        try:
+            self.advance_admission(pending)
+            return self.finish_admission(slots, slot, pending)
+        except Exception:
+            self.abort_admission(pending)
+            raise
 
     def decode_slots(self, slots: dict, n_steps: int):
         """Run `n_steps` decode steps over the whole slot batch.

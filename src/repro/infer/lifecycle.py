@@ -7,9 +7,9 @@ expire, queues flood, and a single poisoned row must not take the batch down.
 This module gives every request an explicit, *validated* state machine::
 
     QUEUED ──► PREFILLING ──► DECODING ──► FINISHED
-      │   │         │             ├──► CANCELLED    (client cancel/disconnect)
-      │   │         │             ├──► TIMED_OUT    (TTFT or wall-clock deadline)
-      │   │         └──► FAILED   └──► FAILED       (dispatch/NaN quarantine)
+      │   │         ├──► CANCELLED        ├──► CANCELLED    (client cancel/disconnect)
+      │   │         ├──► TIMED_OUT        ├──► TIMED_OUT    (TTFT or wall-clock deadline)
+      │   │         └──► FAILED           └──► FAILED       (dispatch/NaN quarantine)
       │   └──► CANCELLED   (cancelled while queued)
       └──► SHED            (deadline-aware queue shedding)
 
@@ -57,17 +57,23 @@ _TERMINAL = {
     RequestState.SHED,
 }
 
-# Allowed transitions. PREFILLING -> CANCELLED/TIMED_OUT is intentionally
-# absent: admission (batch-1 prefill + install) is one synchronous host call,
-# so cancellation/deadline checks happen at the chunk boundaries on either
-# side of it, never inside it.
+# Allowed transitions. PREFILLING -> CANCELLED/TIMED_OUT exists for the
+# chunked-prefill path (DESIGN.md §12): a long-prompt admission spans many
+# scheduler steps, and cancels/deadlines land at the step boundaries between
+# its chunks. Synchronous (unchunked) admission still can't observe them
+# mid-prefill — it is one host call — so there they fire on either side.
 _ALLOWED: Dict[RequestState, set] = {
     RequestState.QUEUED: {
         RequestState.PREFILLING,
         RequestState.CANCELLED,
         RequestState.SHED,
     },
-    RequestState.PREFILLING: {RequestState.DECODING, RequestState.FAILED},
+    RequestState.PREFILLING: {
+        RequestState.DECODING,
+        RequestState.CANCELLED,
+        RequestState.TIMED_OUT,
+        RequestState.FAILED,
+    },
     RequestState.DECODING: {
         RequestState.FINISHED,
         RequestState.CANCELLED,
@@ -109,6 +115,11 @@ class RequestLifecycle:
     finished_at: Optional[float] = None
     n_tokens: int = 0
     new_tokens: Optional[np.ndarray] = None
+    # prefix-cache / chunked-prefill stamps (DESIGN.md §12): prompt tokens
+    # served from cached KV at admission, and how many prefill dispatches
+    # the admission took (1 = whole-shot)
+    prefix_hit_tokens: int = 0
+    prefill_chunks: int = 0
     history: List[Tuple[RequestState, float]] = dataclasses.field(
         default_factory=list
     )

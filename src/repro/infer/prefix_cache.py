@@ -1,0 +1,380 @@
+"""Radix-trie prefix cache over committed token prefixes (DESIGN.md §12).
+
+LUT-GEMM attacks the decode-side memory wall; at serving scale the other
+half of the cost is redundant *prefill* — every request recomputes KV rows
+for the shared system prompt. This module indexes committed prompt prefixes
+in a radix trie of fixed-size token blocks, each block backed by
+device-resident cache rows, so admission can install the shared prefix and
+prefill only the uncached suffix (``Engine.begin_admission`` consults it).
+
+Structure
+---------
+- One trie node per block of ``block_tokens`` consecutive token ids; the
+  child edge key is the block's raw token bytes, so lookup is exact (no
+  hash-collision false sharing) and O(plen / block_tokens).
+- A node owns the block's POSITIONAL cache rows (``(repeat, 1, bt, ...)``
+  per leaf, gathered by :func:`repro.models.layers.gather_prefix_rows`) and,
+  for recurrent architectures, a RECURRENT boundary snapshot of the state
+  after the block's last token. STATIC leaves are never stored (no-op class).
+- Nodes are **ref-counted**: :meth:`begin` pins the matched path for the
+  lifetime of the admission; :meth:`complete`/:meth:`abort` unpin. Pinned
+  nodes are never evicted, so accounting is exact even though installs are
+  *copies* (eviction after install is correctness-harmless by construction).
+- **LRU eviction** keeps ``cached_bytes <= max_bytes``: only childless,
+  unpinned nodes are candidates (chains drain leaf-first), oldest
+  ``last_used`` first.
+- The cache is bound to one ``(model, quant-policy)`` identity
+  (:func:`model_identity`): an engine with a different config, quantization
+  policy, per-leaf format map, or mesh refuses to share it.
+
+Accounting invariants (tests/test_prefix_cache.py)::
+
+    hits + misses == commits + aborts     # every begin() ends exactly once
+    pinned == 0                           # at shutdown / between requests
+
+Host-side only: the trie, refcounts and LRU live on the host; the rows it
+stores are device arrays produced by the engine's jitted gather and consumed
+by its jitted install — this module never traces or compiles anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def model_identity(cfg, params, mesh=None) -> str:
+    """Digest of the (model, quant-policy) identity a prefix cache keys on.
+
+    Covers the config, every param leaf's path + shape/dtype, and — for
+    :class:`~repro.core.qtensor.QuantizedTensor` leaves — the format tag and
+    ``(q, g, k, o)`` statics, plus the mesh shape (sharded rows are reusable
+    only under the same placement). Weight *values* are deliberately not
+    hashed (that would force a device fetch); the identity guards against
+    structural misuse — sharing a cache across quant policies or
+    architectures — not against reloading different checkpoints into
+    byte-identical shapes.
+    """
+    from repro.core.qtensor import QuantizedTensor
+
+    parts = [repr(cfg)]
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if isinstance(leaf, QuantizedTensor):
+            parts.append(
+                f"{name}:{leaf.fmt}:q{leaf.q}:g{leaf.g}:{leaf.k}x{leaf.o}"
+            )
+        else:
+            parts.append(f"{name}:dense:{leaf.dtype}:{tuple(leaf.shape)}")
+    if mesh is not None:
+        parts.append(f"mesh:{sorted(dict(mesh.shape).items())}")
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+
+def concat_rows(rows_list):
+    """Concatenate per-block row pytrees along the row axis (axis 2).
+    Placeholder leaves (non-positional, shape ``(0,)``) pass through."""
+
+    def cat(*xs):
+        if xs[0].ndim < 3:
+            return xs[0]
+        return jnp.concatenate(xs, axis=2)
+
+    return jax.tree.map(cat, *rows_list)
+
+
+def pad_rows(rows, total: int):
+    """Zero-pad a row pytree's row axis (axis 2) up to ``total`` rows, so the
+    jitted install compiles once per row *bucket* instead of once per prefix
+    length. Safe on a fresh cache: rows past the real prefix are zero there
+    already (see :func:`repro.models.layers.install_prefix_rows`)."""
+
+    def pad(x):
+        if x.ndim < 3 or x.shape[2] == total:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, total - x.shape[2])
+        return jnp.pad(x, widths)
+
+    return jax.tree.map(pad, rows)
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(int(x.nbytes) for x in jax.tree.leaves(tree))
+
+
+class _Node:
+    __slots__ = (
+        "key", "tokens", "parent", "children", "rows", "snap",
+        "nbytes", "refs", "last_used", "end",
+    )
+
+    def __init__(self, key: bytes, tokens, parent, rows, snap, end: int):
+        self.key = key
+        self.tokens = tokens
+        self.parent = parent
+        self.children: Dict[bytes, "_Node"] = {}
+        self.rows = rows
+        self.snap = snap
+        self.nbytes = _tree_nbytes(rows) + (
+            0 if snap is None else _tree_nbytes(snap)
+        )
+        self.refs = 0
+        self.last_used = 0
+        self.end = end  # prefix length (tokens) through this node
+
+
+@dataclasses.dataclass
+class PrefixHandle:
+    """One admission's view of the cache: the pinned matched path plus the
+    commit plan for the blocks the prompt would add. The engine fills
+    ``rows``/``snaps`` (aligned with ``new_spans``) at finish-admission time;
+    the scheduler calls :meth:`PrefixCache.complete` at the request's
+    terminal transition (or :meth:`PrefixCache.abort` if admission died)."""
+
+    tokens: np.ndarray                       # full prompt, host int32
+    matched: List[_Node]                     # pinned root→leaf path
+    length: int                              # matched prefix tokens
+    new_spans: List[Tuple[int, int]]         # blocks to commit: [(start, end))
+    rows: List[object] = dataclasses.field(default_factory=list)
+    snaps: List[Optional[object]] = dataclasses.field(default_factory=list)
+    closed: bool = False
+
+
+class PrefixCache:
+    """Ref-counted, LRU-evicted radix trie of device-resident prefix blocks.
+
+    ``block_tokens`` is the trie granularity (a prefix is reusable in
+    multiples of it); ``max_bytes`` bounds the device bytes held by
+    committed blocks. ``metrics``/``tracer`` mirror the counters into a
+    :class:`repro.obs.metrics.MetricsRegistry` (``prefix_<key>_total`` +
+    cached-bytes/trie-size gauges) and emit ``evict`` trace instants; the
+    scheduler attaches its own via :meth:`attach` when none were given.
+    """
+
+    def __init__(
+        self,
+        *,
+        block_tokens: int = 16,
+        max_bytes: int = 64 << 20,
+        metrics=None,
+        tracer=None,
+    ):
+        if block_tokens < 1:
+            raise ValueError(f"block_tokens must be >= 1, got {block_tokens}")
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.block_tokens = block_tokens
+        self.max_bytes = max_bytes
+        self.metrics = metrics
+        self.tracer = tracer
+        self._root = _Node(b"", None, None, {}, None, 0)
+        self._root.nbytes = 0
+        self._nodes: List[_Node] = []  # all non-root nodes (small; scans ok)
+        self._bytes = 0
+        self._tick = 0
+        self._model_key: Optional[str] = None
+        self.counters: Dict[str, int] = {
+            "hits": 0, "misses": 0, "commits": 0, "aborts": 0, "evictions": 0,
+        }
+        if metrics is not None:
+            self._register_series()
+
+    # -- observability -------------------------------------------------------
+
+    def attach(self, metrics=None, tracer=None) -> None:
+        """Adopt a registry/tracer if none were given at construction (the
+        scheduler calls this so serve metrics and prefix metrics share one
+        exporter)."""
+        if self.metrics is None and metrics is not None:
+            self.metrics = metrics
+            self._register_series()
+        if self.tracer is None and tracer is not None:
+            self.tracer = tracer
+
+    def _register_series(self) -> None:
+        for key in self.counters:
+            self.metrics.counter(
+                f"prefix_{key}_total", f"prefix cache events: {key}"
+            )
+        self._set_gauges()
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self.counters[key] += n
+        if self.metrics is not None:
+            self.metrics.counter(f"prefix_{key}_total").inc(n)
+
+    def _set_gauges(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.gauge(
+            "prefix_cached_bytes", "device bytes held by committed blocks"
+        ).set(self._bytes)
+        self.metrics.gauge(
+            "prefix_trie_nodes", "committed prefix blocks in the trie"
+        ).set(len(self._nodes))
+        self.metrics.gauge(
+            "prefix_pinned_refs", "outstanding pins (in-flight admissions)"
+        ).set(self.pinned)
+
+    # -- identity ------------------------------------------------------------
+
+    def bind(self, model_key: str) -> None:
+        """First bind wins; a later engine with a different identity refuses
+        to share the cache (its rows would be garbage for that model)."""
+        if self._model_key is None:
+            self._model_key = model_key
+        elif self._model_key != model_key:
+            raise ValueError(
+                f"prefix cache is bound to model identity "
+                f"{self._model_key!r}; refusing to serve {model_key!r} — "
+                f"one PrefixCache per (model, quant-policy)"
+            )
+
+    # -- stats ---------------------------------------------------------------
+
+    @property
+    def cached_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self._nodes)
+
+    @property
+    def pinned(self) -> int:
+        return sum(n.refs for n in self._nodes)
+
+    def stats(self) -> dict:
+        return {
+            "nodes": len(self._nodes),
+            "cached_bytes": self._bytes,
+            "pinned": self.pinned,
+            "block_tokens": self.block_tokens,
+            "max_bytes": self.max_bytes,
+            **self.counters,
+        }
+
+    # -- the admission protocol ---------------------------------------------
+
+    def begin(
+        self, tokens, *, max_match: int, max_commit: int
+    ) -> PrefixHandle:
+        """Match-and-pin: walk the trie over the prompt's leading blocks,
+        pin the matched path, and plan which new blocks a commit would add.
+
+        ``max_match`` caps the reusable prefix (the engine passes
+        ``plen - 1`` — at least the last prompt token must prefill so decode
+        has logits — min the ring cap). ``max_commit`` caps the committable
+        prefix (0 when a ring cache wrapped during prefill and early rows
+        were clobbered). Every ``begin`` is ended by exactly one
+        ``complete``/``abort``.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)  # staticcheck: host-sync(prompt ids are host input; the trie walk is host-side by design)
+        bt = self.block_tokens
+        self._tick += 1
+        node, matched, length = self._root, [], 0
+        while length + bt <= max_match:
+            child = node.children.get(tokens[length : length + bt].tobytes())
+            if child is None:
+                break
+            matched.append(child)
+            node = child
+            length += bt
+        for n in matched:
+            n.refs += 1
+            n.last_used = self._tick
+        want = (max(0, max_commit) // bt) * bt
+        spans = [(s, s + bt) for s in range(length, want, bt)]
+        self._count("hits" if length else "misses")
+        return PrefixHandle(
+            tokens=tokens, matched=matched, length=length, new_spans=spans
+        )
+
+    def complete(self, handle: PrefixHandle) -> None:
+        """Commit the handle's new blocks (rows/snaps filled by the engine)
+        and unpin its matched path. Idempotent; racing identical commits
+        (two requests with the same prompt in flight) keep the first-inserted
+        block and drop the duplicate rows."""
+        if handle.closed:
+            return
+        handle.closed = True
+        self._tick += 1
+        node = handle.matched[-1] if handle.matched else self._root
+        for i, (s, e) in enumerate(handle.new_spans):
+            if i >= len(handle.rows):
+                break  # engine stopped capturing (e.g. budget/ring guard)
+            key = handle.tokens[s:e].tobytes()
+            child = node.children.get(key)
+            if child is None:
+                snap = handle.snaps[i] if i < len(handle.snaps) else None
+                child = _Node(
+                    key, handle.tokens[s:e].copy(), node,
+                    handle.rows[i], snap, e,
+                )
+                node.children[key] = child
+                self._nodes.append(child)
+                self._bytes += child.nbytes
+            child.last_used = self._tick
+            node = child
+        self._unpin(handle)
+        self._count("commits")
+        self._evict_to_budget()
+        self._set_gauges()
+
+    def abort(self, handle: PrefixHandle) -> None:
+        """Unpin without committing (admission failed/cancelled mid-prefill).
+        Idempotent."""
+        if handle.closed:
+            return
+        handle.closed = True
+        self._unpin(handle)
+        self._count("aborts")
+        self._set_gauges()
+
+    def _unpin(self, handle: PrefixHandle) -> None:
+        for n in handle.matched:
+            assert n.refs > 0, "refcount underflow: begin/complete mismatch"
+            n.refs -= 1
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evictable(self) -> List[_Node]:
+        return [n for n in self._nodes if not n.children and n.refs == 0]
+
+    def _evict_one(self, node: _Node) -> None:
+        del node.parent.children[node.key]
+        self._nodes.remove(node)
+        self._bytes -= node.nbytes
+        node.rows = node.snap = None  # drop the device references now
+        self._count("evictions")
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant(
+                "evict", cat="prefix", lane="scheduler",
+                args={
+                    "block_end": node.end, "nbytes": node.nbytes,
+                    "cached_bytes": self._bytes, "nodes": len(self._nodes),
+                },
+            )
+
+    def _evict_to_budget(self) -> None:
+        while self._bytes > self.max_bytes:
+            victims = self._evictable()
+            if not victims:
+                return  # everything live is pinned or interior — over-budget
+            self._evict_one(min(victims, key=lambda n: n.last_used))
+
+    def evict_to(self, max_bytes: int) -> None:
+        """Shrink the budget and evict down to it immediately (memory
+        pressure hook; also the test harness for mid-flight eviction)."""
+        self.max_bytes = max_bytes
+        self._evict_to_budget()
+        self._set_gauges()

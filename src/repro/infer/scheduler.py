@@ -218,6 +218,15 @@ class Scheduler:
 
     Lifecycle/robustness knobs (all have serving-sane defaults):
 
+    - ``prefill_chunk`` (tokens) switches admission to *chunked prefill*
+      (DESIGN.md §12): a free slot claims a queued request immediately, but
+      its prompt prefills at most ``prefill_chunk`` tokens per scheduler
+      step, interleaved with the decode chunks of active streams — a long
+      prompt admission never stalls running requests for its whole prefill.
+      Chunk dispatches are padded to power-of-two buckets so they compile
+      once per bucket, not once per prompt length. Requires
+      ``engine.supports_chunked_prefill``; ``None`` (default) keeps the
+      synchronous whole-prompt admission.
     - ``max_queue`` bounds the admission queue; a full queue rejects at
       ``submit`` with :class:`QueueFullError` (None = unbounded, for trusted
       batch drivers only).
@@ -263,6 +272,7 @@ class Scheduler:
         chunk: int = 8,
         speculate: Optional[SpecConfig] = None,
         *,
+        prefill_chunk: Optional[int] = None,
         max_queue: Optional[int] = 64,
         retries: int = 2,
         backoff_s: float = 0.05,
@@ -283,6 +293,20 @@ class Scheduler:
             raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         if retries < 0:
             raise ValueError("retries must be >= 0")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(
+                    "prefill_chunk must be >= 1 (or None for synchronous "
+                    "whole-prompt admission)"
+                )
+            if not engine.supports_chunked_prefill:
+                raise ValueError(
+                    "chunked prefill is unsupported for this engine's "
+                    "architecture (ring-buffer/recurrent models pad-clobber "
+                    "— see Engine.supports_chunked_prefill); use "
+                    "prefill_chunk=None"
+                )
+        self.prefill_chunk = prefill_chunk
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
@@ -299,6 +323,8 @@ class Scheduler:
         self.slots = engine.init_slots(n_slots, speculate=speculate)
         self.queue: Deque[Request] = deque()
         self._tenants: List[Optional[_Tenant]] = [None] * n_slots
+        # chunked-prefill admissions in flight: slot -> (Request, pending)
+        self._pending: Dict[int, tuple] = {}
         self.outcomes: Dict[int, RequestLifecycle] = {}
         self._pending_cancel: Dict[int, str] = {}
         self.decode_steps = 0  # total chunked decode steps executed
@@ -320,6 +346,11 @@ class Scheduler:
         self._used_rids = set()  # rids ever seen by THIS scheduler
         self.tracer = tracer
         self.metrics = metrics
+        pc = getattr(engine, "prefix_cache", None)
+        if pc is not None:
+            # prefix metrics/trace instants share the serve exporter unless
+            # the cache already has its own
+            pc.attach(metrics=metrics, tracer=tracer)
         if metrics is not None:
             metrics.gauge(
                 "serve_slot_capacity", "configured decode-batch slots"
@@ -485,7 +516,7 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and self.n_active == 0
+        return not self.queue and self.n_active == 0 and not self._pending
 
     @property
     def spec_accept_rate(self) -> float:
@@ -552,6 +583,18 @@ class Scheduler:
                     self.outcomes[req.rid], RequestState.CANCELLED, reason
                 )
         self.queue = keep
+        # chunked-prefill admissions cancel between their chunks: unpin the
+        # prefix handle and drop the pending state — the slot row was never
+        # written, so it is simply free again
+        for slot, (req, pending) in list(self._pending.items()):
+            reason = self._pending_cancel.pop(req.rid, None)
+            if reason is not None:
+                self._count("cancelled")
+                self.engine.abort_admission(pending)
+                del self._pending[slot]
+                self._terminal(
+                    self.outcomes[req.rid], RequestState.CANCELLED, reason
+                )
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:
                 continue
@@ -586,6 +629,27 @@ class Scheduler:
                 self._count("shed")
                 self._terminal(rec, RequestState.SHED, expired)
         self.queue = keep
+        # mid-prefill deadlines (chunked admissions span many steps): the
+        # TTFT deadline always applies — no first token yet by definition
+        for slot, (req, pending) in list(self._pending.items()):
+            rec = self.outcomes[req.rid]
+            age = now - rec.submitted_at
+            expired = None
+            if req.deadline_s is not None and age > req.deadline_s:
+                expired = (
+                    f"deadline {req.deadline_s}s exceeded mid-prefill "
+                    f"({pending.pos}/{pending.plen} prompt tokens)"
+                )
+            elif req.ttft_deadline_s is not None and age > req.ttft_deadline_s:
+                expired = (
+                    f"TTFT deadline {req.ttft_deadline_s}s exceeded "
+                    f"mid-prefill ({pending.pos}/{pending.plen} prompt tokens)"
+                )
+            if expired is not None:
+                self._count("timed_out")
+                self.engine.abort_admission(pending)
+                del self._pending[slot]
+                self._terminal(rec, RequestState.TIMED_OUT, expired)
         for slot, tenant in enumerate(self._tenants):
             if tenant is None:
                 continue
@@ -695,13 +759,52 @@ class Scheduler:
             stopped=stopped,
         )
 
+    def _note_prefix(self, rec: RequestLifecycle, prompt_len: int) -> None:
+        """Stamp prefix-cache hit stats onto the lifecycle record and emit
+        the ``cache_hit`` trace instant (DESIGN.md §12 observability)."""
+        h = self.engine.take_prefix_handle()
+        if h is None:
+            return
+        rec.prefix_hit_tokens = h.length
+        if h.length and self.tracer is not None:
+            self.tracer.instant(
+                "cache_hit", cat="prefix", lane="scheduler",
+                args={"rid": rec.rid, "hit_tokens": h.length,
+                      "prompt_len": prompt_len},
+            )
+
+    def _install_tenant(self, slot: int, req: Request) -> Optional[Completion]:
+        """Post-admission bookkeeping shared by both admission modes: the
+        DECODING transition, tenant install, and (spec mode) emitting the
+        first token sampled at admission — which can complete a budget-1
+        request right here."""
+        rec = self.outcomes[req.rid]
+        rec.transition(RequestState.DECODING, self._clock())
+        self._note_prefix(rec, int(req.prompt.size))
+        tenant = _Tenant(req, self.decode_steps)
+        self._tenants[slot] = tenant
+        if self.speculate is not None:
+            t0 = int(np.asarray(self.slots["t_pend"][slot]))  # staticcheck: host-sync(per-admission fetch of the pre-sampled first token)
+            stopped = self._record_tokens(tenant, [t0])
+            if stopped or len(tenant.emitted) >= req.max_new_tokens:
+                return self._finish(slot, stopped=stopped)
+        return None
+
     def _admit_free_slots(self) -> List[Completion]:
         """Fill free slots from the queue. In speculative mode admission also
         emits the request's first token (sampled from its own prefill logits
         on device), so a budget-1 request can complete right here — returned
         so its slot frees up for the same admission round. A prefill dispatch
         that keeps failing quarantines only the admitting request; the slot
-        stays free for the next queued request in the same round."""
+        stays free for the next queued request in the same round.
+
+        With ``prefill_chunk`` set, admission is *chunked* instead
+        (DESIGN.md §12): free slots claim queued requests, but each pending
+        admission prefills at most ``prefill_chunk`` prompt tokens per step,
+        so one long prompt never stalls the decode chunks of active streams.
+        """
+        if self.prefill_chunk is not None:
+            return self._admit_chunked()
         done: List[Completion] = []
         for slot in range(self.n_slots):
             while self.queue and self._tenants[slot] is None:
@@ -730,14 +833,88 @@ class Scheduler:
                     self._count("failed")
                     self._terminal(rec, RequestState.FAILED, str(e))
                     continue  # slot still free: try the next queued request
-                rec.transition(RequestState.DECODING, self._clock())
-                tenant = _Tenant(req, self.decode_steps)
-                self._tenants[slot] = tenant
-                if self.speculate is not None:
-                    t0 = int(np.asarray(self.slots["t_pend"][slot]))  # staticcheck: host-sync(per-admission fetch of the pre-sampled first token)
-                    stopped = self._record_tokens(tenant, [t0])
-                    if stopped or len(tenant.emitted) >= req.max_new_tokens:
-                        done.append(self._finish(slot, stopped=stopped))
+                rec.prefill_chunks = 1
+                c = self._install_tenant(slot, req)
+                if c is not None:
+                    done.append(c)
+        return done
+
+    def _admit_chunked(self) -> List[Completion]:
+        """Chunked admission: claim free slots (prefix lookup + install —
+        host trie walk plus at most one row-install dispatch), then advance
+        every pending admission by ``prefill_chunk`` prompt tokens. An
+        admission that completes installs its tenant this same step; one
+        that keeps failing is FAILED alone, its prefix pins released."""
+        done: List[Completion] = []
+        for slot in range(self.n_slots):
+            if self._tenants[slot] is not None or slot in self._pending:
+                continue
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            rec = self.outcomes[req.rid]
+            rec.transition(RequestState.PREFILLING, self._clock())
+
+            def begin(req=req):
+                if self.faults is not None:
+                    self.faults.on_prefill(req.rid)
+                return self.engine.begin_admission(
+                    req.prompt,
+                    max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature,
+                    seed=req.seed,
+                    speculate=req.speculate is not False,
+                    chunked=True,
+                )
+
+            try:
+                pending = self._with_retry(
+                    begin, what=f"admission begin (request {req.rid})"
+                )
+            except DispatchError as e:
+                self._count("failed")
+                self._terminal(rec, RequestState.FAILED, str(e))
+                continue
+            self._pending[slot] = (req, pending)
+        for slot, (req, pending) in sorted(self._pending.items()):
+            rec = self.outcomes[req.rid]
+
+            def advance(pending=pending):
+                return self.engine.advance_admission(
+                    pending, self.prefill_chunk
+                )
+
+            def fail(e: DispatchError) -> None:
+                self.engine.abort_admission(pending)
+                del self._pending[slot]
+                self._count("failed")
+                self._terminal(rec, RequestState.FAILED, str(e))
+
+            try:
+                self._with_retry(
+                    advance, what=f"prefill chunk (request {req.rid})"
+                )
+            except DispatchError as e:
+                fail(e)
+                continue
+            if not pending.done:
+                continue
+
+            def install(pending=pending, slot=slot):
+                return self.engine.finish_admission(self.slots, slot, pending)
+
+            try:
+                self.slots = self._with_retry(
+                    install, what=f"admission install (request {req.rid})"
+                )
+            except DispatchError as e:
+                fail(e)
+                continue
+            del self._pending[slot]
+            rec.prefill_chunks = pending.prefill_chunks
+            c = self._install_tenant(slot, req)
+            if c is not None:
+                done.append(c)
         return done
 
     def _harvest(self, slot: int) -> Optional[Completion]:

@@ -72,11 +72,24 @@ from repro.models import init_params, reduced
 from repro.quant import QuantPolicy, quantize_params, quantized_bytes
 
 
-def build_requests(cfg, n, prompt_len, gen, *, mixed_temperature=True, seed=3):
+def build_requests(cfg, n, prompt_len, gen, *, mixed_temperature=True, seed=3,
+                   shared_prefix_len=0):
+    """``shared_prefix_len > 0`` gives every request the same leading tokens
+    (a shared system prompt) followed by a per-request tail — the workload
+    shape the prefix cache (DESIGN.md §12) exists for. The total prompt
+    length stays ``prompt_len``."""
     corpus = MarkovCorpus(cfg.vocab, seed=seed)
+    if shared_prefix_len >= prompt_len:
+        raise ValueError(
+            f"shared_prefix_len ({shared_prefix_len}) must leave at least one "
+            f"per-request token (prompt_len={prompt_len})"
+        )
+    shared = corpus.sample(1, prompt_len, seed=99)[0, :shared_prefix_len]
     reqs = []
     for i in range(n):
         prompt = corpus.sample(1, prompt_len, seed=100 + i)[0, :prompt_len]
+        if shared_prefix_len:
+            prompt = np.concatenate([shared, prompt[shared_prefix_len:]])
         temp = [0.0, 1.0, 0.7][i % 3] if mixed_temperature else 0.0
         reqs.append(
             Request(
@@ -114,15 +127,17 @@ def pareto_arrivals(n, rate, alpha=1.5, seed=0):
 
 
 def drive_continuous(engine, reqs, arrivals, *, n_slots, chunk, speculate=None,
-                     tracer=None, metrics=None):
+                     prefill_chunk=None, tracer=None, metrics=None):
     """Wall-clock serve loop: submit each request at its arrival offset, step
     the scheduler whenever there is work. Returns (scheduler, completions,
     makespan_s) — the scheduler is handed back for utilisation stats.
 
     ``tracer``/``metrics`` (repro.obs) instrument the run: per-request
-    lifecycle spans and the serving metric catalog (DESIGN.md §11)."""
+    lifecycle spans and the serving metric catalog (DESIGN.md §11).
+    ``prefill_chunk`` enables chunked prefill (DESIGN.md §12)."""
     sched = Scheduler(engine, n_slots=n_slots, chunk=chunk, speculate=speculate,
-                      tracer=tracer, metrics=metrics)
+                      prefill_chunk=prefill_chunk, tracer=tracer,
+                      metrics=metrics)
     done = []
     t0 = time.perf_counter()
     i = 0
@@ -186,6 +201,21 @@ def main() -> None:
                     help="self-speculative decode chunks from the nested "
                          "QD-bit draft, GAMMA proposals per chunk (e.g. 2:4); "
                          "requires --q > QD to actually speed anything up")
+    ap.add_argument("--prefix-cache-mb", type=int, default=0,
+                    help="KV prefix-cache budget in MiB (DESIGN.md §12): "
+                         "committed prompt prefixes are reused across "
+                         "requests under ref-counted LRU eviction (0 = off)")
+    ap.add_argument("--prefix-block", type=int, default=16,
+                    help="prefix-cache block granularity in tokens: prefixes "
+                         "match and commit in whole blocks, so a shared "
+                         "system prompt shorter than one block never hits")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill token budget per scheduler step "
+                         "(DESIGN.md §12): long prompts prefill in bucketed "
+                         "chunks interleaved with decode (0 = whole-shot)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every request the same leading tokens (shared "
+                         "system prompt) — the prefix-cache workload shape")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: shard weights/KV over an "
                          "N-way model mesh under shard_map (greedy tokens "
@@ -223,6 +253,9 @@ def main() -> None:
     if spec and args.sequential:
         ap.error("--speculate drives the continuous-batching scheduler; "
                  "it cannot be combined with --sequential")
+    if args.sequential and (args.prefix_cache_mb or args.prefill_chunk):
+        ap.error("--prefix-cache-mb/--prefill-chunk drive the scheduler; "
+                 "they cannot be combined with --sequential")
 
     # reduced config sized so quantization actually bites (>=128-dim linears)
     cfg = reduced(get_config(args.arch), d_model=256, n_kv_heads=4,
@@ -260,11 +293,20 @@ def main() -> None:
         print(f"jax.profiler capture -> {args.profile_dir}")
 
     headroom = (spec.gamma + 1) if spec else 0
+    prefix_cache = None
+    if args.prefix_cache_mb > 0:
+        from repro.infer import PrefixCache
+
+        prefix_cache = PrefixCache(
+            block_tokens=args.prefix_block,
+            max_bytes=args.prefix_cache_mb << 20,
+        )
     engine = Engine(cfg, params, mesh=mesh,
                     max_seq=args.prompt_len + args.gen + 8 + headroom,
-                    tracer=tracer)
+                    tracer=tracer, prefix_cache=prefix_cache)
     del params  # the engine holds the fused layout; free the unfused tree
-    reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen)
+    reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen,
+                          shared_prefix_len=args.shared_prefix_len)
     arrivals = poisson_arrivals(args.requests, args.rate, seed=1)
     total_new = sum(r.max_new_tokens for r in reqs)
 
@@ -278,7 +320,8 @@ def main() -> None:
         with profile_cm:
             sched, done, dt = drive_continuous(
                 engine, reqs, arrivals, n_slots=args.slots, chunk=args.chunk,
-                speculate=spec, tracer=tracer, metrics=registry,
+                speculate=spec, prefill_chunk=args.prefill_chunk or None,
+                tracer=tracer, metrics=registry,
             )
         util = sched.steps_active / max(1, sched.decode_steps * sched.n_slots)
         tag = "continuous"
@@ -293,6 +336,12 @@ def main() -> None:
               f"{dt:.2f}s ({total_new/dt:.1f} tok/s on this host, "
               f"{args.slots} slots, chunk={args.chunk}, "
               f"slot utilisation {util:.0%}{extra})")
+        if prefix_cache is not None:
+            st = prefix_cache.stats()
+            print(f"prefix cache: {st['hits']} hits / {st['misses']} misses, "
+                  f"{st['commits']} commits, {st['evictions']} evictions, "
+                  f"{st['cached_bytes']/2**20:.2f} MiB cached "
+                  f"({st['nodes']} blocks)")
         print("sample:", done[0].new_tokens)
 
     if tracer is not None:

@@ -11,15 +11,18 @@ continuous-batching scheduler to real clients:
   streams fed via ``loop.call_soon_threadsafe``. Tokens stream per-slot as
   chunks complete; terminal lifecycle events (finished / cancelled /
   timed-out / failed / shed) close the stream with a per-request status.
-- an **aiohttp WebSocket app** (:func:`make_app`) on top: one request per
-  socket, token frames as they decode, client disconnect honoured as
-  cancellation at the next chunk boundary, admission control under burst
-  load (a full queue rejects loudly instead of buffering without bound), a
-  ``/v1/metrics`` endpoint reporting per-request TTFT/TPOT p50/p95/p99 as
-  JSON (``?format=prometheus`` for the text exposition over the session's
-  metrics registry + the process-global qmatmul dispatch counts), and a
-  ``/v1/trace`` endpoint exporting the session tracer's recent window as
-  Chrome/Perfetto trace-event JSON (DESIGN.md §11).
+- an **aiohttp app** (:func:`make_app`) on top with two stream transports
+  over the *same* session core and frame schema: a WebSocket endpoint
+  (``/v1/stream``) and an HTTP SSE endpoint (``POST /v1/generate``, one
+  ``data:`` line per frame — curl-able, no WS client needed). Both honour
+  client disconnect as cancellation at the next chunk boundary and apply
+  admission control under burst load (a full queue rejects loudly instead
+  of buffering without bound). A ``/v1/metrics`` endpoint reports
+  per-request TTFT/TPOT p50/p95/p99 as JSON (``?format=prometheus`` for the
+  text exposition over the session's metrics registry + the process-global
+  qmatmul dispatch counts), and a ``/v1/trace`` endpoint exports the
+  session tracer's recent window as Chrome/Perfetto trace-event JSON
+  (DESIGN.md §11).
   aiohttp is optional — the session core works without it (and is what the
   differential tests drive); ``make_app`` raises if it is missing.
 
@@ -44,6 +47,15 @@ WebSocket protocol (``/v1/stream``, JSON frames)::
     or {"type": "error", "rid": 0, "status": "timed_out", "reason": "..."}
     or {"type": "rejected", "reason": "admission queue full (...)"}
     -> {"type": "cancel"}        (or just close the socket)
+
+SSE protocol (``POST /v1/generate``, same JSON frames, one per ``data:``
+line; closing the connection cancels the request)::
+
+    curl -N -X POST http://HOST:PORT/v1/generate \
+        -d '{"prompt": [1, 2, 3], "max_new_tokens": 16}'
+    data: {"type": "accepted", "rid": 0}
+    data: {"type": "tokens", "rid": 0, "tokens": [5, 17]}
+    data: {"type": "done", "rid": 0, "status": "finished", "n_tokens": 16}
 """
 
 from __future__ import annotations
@@ -51,6 +63,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import itertools
+import json
 import threading
 import time
 from collections import deque
@@ -156,6 +169,7 @@ class ServeSession:
         n_slots: int = 4,
         chunk: int = 8,
         speculate=None,
+        prefill_chunk: Optional[int] = None,
         max_queue: Optional[int] = 64,
         max_buffer: int = 1024,
         nan_guard: bool = True,
@@ -170,7 +184,10 @@ class ServeSession:
         serving session should always be able to answer ``/v1/trace`` and
         ``/v1/metrics`` — the observability layer is host-side-only and
         never perturbs tokens (tests/test_obs.py), so on-by-default is
-        safe. Pass a shared registry/tracer to aggregate across sessions."""
+        safe. Pass a shared registry/tracer to aggregate across sessions.
+        ``prefill_chunk`` enables chunked prefill on the scheduler
+        (DESIGN.md §12) — long-prompt admissions then interleave with
+        decode instead of stalling it."""
         self._engine = engine
         self._faults = faults
         self._max_buffer = max_buffer
@@ -185,6 +202,7 @@ class ServeSession:
             n_slots=n_slots,
             chunk=chunk,
             speculate=speculate,
+            prefill_chunk=prefill_chunk,
             max_queue=max_queue,
             nan_guard=nan_guard,
             faults=faults,
@@ -512,11 +530,51 @@ def make_app(session: ServeSession) -> "web.Application":
                 await ws.close()
         return ws
 
+    async def generate(request):
+        # SSE transport: same session core and frame schema as the WS
+        # endpoint, but over plain HTTP — one JSON frame per ``data:`` line.
+        try:
+            msg = await request.json()
+            req = request_from_json(msg)
+        except (KeyError, TypeError, ValueError) as e:
+            return web.json_response(
+                {"type": "rejected", "reason": f"bad request: {e!r}"},
+                status=400,
+            )
+        stream = await session.submit_stream(req)
+        resp = web.StreamResponse(
+            headers={
+                "Content-Type": "text/event-stream",
+                "Cache-Control": "no-cache",
+                "X-Accel-Buffering": "no",
+            }
+        )
+        await resp.prepare(request)
+        try:
+            async for ev in stream:
+                frame = f"data: {json.dumps(ev.to_json())}\n\n"
+                try:
+                    await resp.write(frame.encode("utf-8"))
+                except (ConnectionResetError, RuntimeError):
+                    stream.cancel("client disconnected")
+                    break
+        except asyncio.CancelledError:
+            # aiohttp cancels the handler when the peer drops mid-stream:
+            # disconnect-as-cancel, same contract as the WS endpoint
+            stream.cancel("client disconnected")
+            raise
+        try:
+            await resp.write_eof()
+        except (ConnectionResetError, RuntimeError):
+            pass
+        return resp
+
     app = web.Application()
     app.router.add_get("/healthz", healthz)
     app.router.add_get("/v1/metrics", metrics)
     app.router.add_get("/v1/trace", trace)
     app.router.add_get("/v1/stream", stream)
+    app.router.add_post("/v1/generate", generate)
     return app
 
 
@@ -564,6 +622,10 @@ def main() -> None:  # pragma: no cover - CLI wrapper over tested pieces
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--speculate", type=str, default=None, metavar="QD:GAMMA")
+    ap.add_argument("--prefix-cache-mb", type=int, default=0,
+                    help="KV prefix-cache budget in MiB (0 disables)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill token budget per step (0 = whole-shot)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8777)
     args = ap.parse_args()
@@ -576,13 +638,19 @@ def main() -> None:  # pragma: no cover - CLI wrapper over tested pieces
     if args.q:
         params = quantize_params(params, QuantPolicy(q=args.q, g=args.g, iters=4))
     engine_max_seq = args.max_seq + (spec.gamma + 1 if spec else 0)
-    from repro.infer import Engine
+    from repro.infer import Engine, PrefixCache
 
-    engine = Engine(cfg, params, max_seq=engine_max_seq)
+    pc = (
+        PrefixCache(max_bytes=args.prefix_cache_mb << 20)
+        if args.prefix_cache_mb > 0
+        else None
+    )
+    engine = Engine(cfg, params, max_seq=engine_max_seq, prefix_cache=pc)
 
     async def serve():
         session = ServeSession(
             engine, n_slots=args.slots, chunk=args.chunk, speculate=spec,
+            prefill_chunk=args.prefill_chunk or None,
             max_queue=args.max_queue,
         )
         async with session:
@@ -590,6 +658,8 @@ def main() -> None:  # pragma: no cover - CLI wrapper over tested pieces
             print(f"serving {args.arch} (q={args.q}) on "
                   f"ws://{args.host}:{bound_port(runner)}/v1/stream "
                   f"({args.slots} slots, chunk={args.chunk}, "
+                  f"prefill_chunk={args.prefill_chunk or 'off'}, "
+                  f"prefix_cache={args.prefix_cache_mb}MiB, "
                   f"max_queue={args.max_queue})")
             try:
                 while True:

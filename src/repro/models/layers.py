@@ -52,6 +52,88 @@ RECURRENT_CACHE_LEAVES = frozenset({"h", "conv", "c", "n", "m"})
 STATIC_CACHE_LEAVES = frozenset({"k_img", "v_img"})
 
 
+def _cache_leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache install/commit ops (infer/prefix_cache.py, DESIGN.md §12)
+#
+# Prefix reuse applies the same leaf taxonomy as the rewind contract above,
+# but at admission time instead of rollback time:
+#
+# - POSITIONAL: a committed prefix of length L is exactly rows [0, L) along
+#   axis 2 (positions are absolute; a fresh cache has no wrap). Commit
+#   gathers those rows; install writes them back into a fresh zeroed cache
+#   and the suffix prefill resumes at pos=L.
+# - RECURRENT: state folds tokens irreversibly, so a committed block carries
+#   a snapshot of the state *at the block boundary* (captured from a
+#   collect_states=True prefill); install overwrites the fresh zero state.
+# - STATIC: projected image memory is prompt-independent — no-op (and the
+#   prefix subsystem refuses VLM configs outright).
+#
+# All four functions keep the cache treedef: non-participating leaves become
+# (0,)-shaped placeholders on gather (the snapshot_rows idiom) and pass
+# through untouched on install.
+# ---------------------------------------------------------------------------
+
+
+def gather_prefix_rows(cache, start, n: int):
+    """POSITIONAL leaves → their ``n`` rows starting at ``start`` along axis 2
+    (``(repeat, B, n, ...)``); every other leaf → an empty placeholder.
+    ``start`` may be traced; the caller guarantees ``start + n <= s_eff``
+    (the ring cap), so the dynamic slice never clamps."""
+
+    def visit(path, leaf):
+        if _cache_leaf_name(path) not in POSITIONAL_CACHE_LEAVES:
+            return jnp.zeros((0,), jnp.int8)
+        return jax.lax.dynamic_slice_in_dim(leaf, start, n, axis=2)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def install_prefix_rows(cache, rows):
+    """Write gathered prefix rows into rows [0, L) of every POSITIONAL leaf
+    of a *fresh* cache. ``rows`` may be zero-padded past the real prefix
+    length: a fresh cache is all-zero there, so the padding writes are
+    no-ops by value — which is what lets install shapes bucket without
+    changing the cache contents."""
+
+    def visit(path, leaf, rw):
+        if _cache_leaf_name(path) not in POSITIONAL_CACHE_LEAVES:
+            return leaf
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, rw.astype(leaf.dtype), 0, axis=2
+        )
+
+    return jax.tree_util.tree_map_with_path(visit, cache, rows)
+
+
+def snapshot_recurrent(cache):
+    """RECURRENT leaves verbatim, everything else an empty placeholder — the
+    boundary-state payload a committed prefix block carries."""
+
+    def visit(path, leaf):
+        if _cache_leaf_name(path) not in RECURRENT_CACHE_LEAVES:
+            return jnp.zeros((0,), jnp.int8)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def install_recurrent(cache, snap):
+    """Overwrite RECURRENT leaves from a boundary snapshot; positional and
+    static leaves pass through untouched."""
+
+    def visit(path, leaf, sn):
+        if _cache_leaf_name(path) not in RECURRENT_CACHE_LEAVES:
+            return leaf
+        return sn.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, cache, snap)
+
+
 # ---------------------------------------------------------------------------
 # init helpers
 # ---------------------------------------------------------------------------

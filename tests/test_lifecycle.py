@@ -113,7 +113,9 @@ def test_state_machine_legal_chain():
     [
         ([], RequestState.DECODING),  # queued can't skip prefill
         ([], RequestState.FINISHED),
-        ([RequestState.PREFILLING], RequestState.CANCELLED),  # not mid-prefill
+        # PREFILLING -> CANCELLED/TIMED_OUT became legal with chunked prefill
+        # (DESIGN.md §12); SHED stays queue-only
+        ([RequestState.PREFILLING], RequestState.SHED),
         ([RequestState.SHED], RequestState.PREFILLING),  # terminal is terminal
         (
             [RequestState.PREFILLING, RequestState.DECODING, RequestState.FINISHED],

@@ -1,0 +1,496 @@
+"""Prefix-cache KV reuse + chunked prefill (ISSUE 10 tentpole, DESIGN.md §12).
+
+The load-bearing invariant: serving against a *warm* prefix cache is
+bit-identical to serving cold and to solo ``Engine.generate`` — across
+quantization formats, speculative decode, tensor parallelism, chunked vs
+whole-shot prefill, and mid-flight eviction. Plus trie/refcount/eviction
+unit tests and the leak-free accounting contract::
+
+    hits + misses == commits + aborts      # every begin ends exactly once
+    pinned == 0                            # refcounts drain at quiescence
+"""
+
+import functools
+import gc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import MarkovCorpus
+from repro.infer import (
+    Engine,
+    PrefixCache,
+    Request,
+    Scheduler,
+    SpecConfig,
+    model_identity,
+)
+from repro.models import init_params, reduced
+from repro.quant import QuantPolicy, quantize_params
+
+KEY = jax.random.PRNGKey(0)
+MAX_SEQ = 64
+Q_GROUP = 32  # keeps (k/g) divisible by tp=2 for row-parallel leaves
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_module_state():
+    """The grid fixtures pin engines — and every executable XLA compiled for
+    them — for the whole process otherwise. On this CPU-only container that
+    accumulated JIT state is enough to segfault XLA's compiler hundreds of
+    tests later (observed in test_tp_serve), so drop it when the module ends."""
+    yield
+    _cold_engine.cache_clear()
+    _params.cache_clear()
+    jax.clear_caches()
+    gc.collect()
+
+
+def _cfg(arch="llama3.2-3b"):
+    return reduced(get_config(arch), d_model=128, n_kv_heads=4, d_ff=256)
+
+
+@functools.lru_cache(maxsize=None)
+def _params(fmt: str):
+    params = init_params(KEY, _cfg())
+    if fmt != "dense":
+        params = quantize_params(
+            params, QuantPolicy(q=3, g=Q_GROUP, iters=2, fmt=fmt)
+        )
+    return params
+
+
+def _mesh(tp: int):
+    if not tp:
+        return None
+    from repro.parallel.tp import make_tp_mesh
+
+    return make_tp_mesh(tp)
+
+
+@functools.lru_cache(maxsize=None)
+def _cold_engine(fmt: str, tp: int = 0) -> Engine:
+    return Engine(_cfg(), _params(fmt), max_seq=MAX_SEQ, mesh=_mesh(tp))
+
+
+def _warm_engine(fmt: str, tp: int = 0, *, block_tokens=4, max_bytes=64 << 20):
+    """Fresh (never lru-cached — the cache is stateful) engine with a cache."""
+    return Engine(
+        _cfg(), _params(fmt), max_seq=MAX_SEQ, mesh=_mesh(tp),
+        prefix_cache=PrefixCache(block_tokens=block_tokens, max_bytes=max_bytes),
+    )
+
+
+def _shared_prefix_requests(n, *, prefix_len=12, gen=6, seed0=0):
+    """n requests sharing a ``prefix_len``-token leading system prompt with
+    per-request tails of varying length — the workload the cache exists for."""
+    cfg = _cfg()
+    corpus = MarkovCorpus(cfg.vocab, seed=3)
+    shared = corpus.sample(1, prefix_len, seed=99)[0, :prefix_len]
+    out = []
+    for i in range(n):
+        tlen = 2 + (i % 4)
+        tail = corpus.sample(1, tlen, seed=100 + i)[0, :tlen]
+        out.append(
+            Request(
+                prompt=np.concatenate([shared, tail]).astype(np.int32),
+                max_new_tokens=gen,
+                temperature=[0.0, 1.0, 0.7][i % 3],
+                seed=seed0 + 10 + i,
+            )
+        )
+    return out
+
+
+def _run(engine, reqs, *, speculate=None, prefill_chunk=None, n_slots=2,
+         chunk=3, **kw):
+    sched = Scheduler(engine, n_slots=n_slots, chunk=chunk, speculate=speculate,
+                      prefill_chunk=prefill_chunk, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched, {c.rid: c for c in sched.run()}
+
+
+def _assert_accounting_clean(pc: PrefixCache):
+    c = pc.counters
+    assert c["hits"] + c["misses"] == c["commits"] + c["aborts"], c
+    assert pc.pinned == 0, "refcounts must drain to zero at quiescence"
+    assert pc.cached_bytes == sum(n.nbytes for n in pc._nodes)
+    assert pc.cached_bytes <= pc.max_bytes
+
+
+# ---------------------------------------------------------------------------
+# trie / refcount / eviction units (no engine: synthetic row payloads)
+# ---------------------------------------------------------------------------
+
+
+def _fake_rows(nbytes=64):
+    return {"k": np.zeros((1, 1, 1, nbytes), np.int8)}
+
+
+def test_trie_match_and_commit_roundtrip():
+    pc = PrefixCache(block_tokens=4, max_bytes=1 << 20)
+    toks = np.arange(10, dtype=np.int32)
+    h = pc.begin(toks, max_match=9, max_commit=10)
+    assert h.length == 0 and h.new_spans == [(0, 4), (4, 8)]
+    h.rows = [_fake_rows(), _fake_rows()]
+    pc.complete(h)
+    assert pc.n_nodes == 2 and pc.counters == {
+        "hits": 0, "misses": 1, "commits": 1, "aborts": 0, "evictions": 0,
+    }
+    # same prompt again: both blocks match (max_match=9 admits [0,8))
+    h2 = pc.begin(toks, max_match=9, max_commit=10)
+    assert h2.length == 8 and h2.new_spans == []
+    assert pc.counters["hits"] == 1
+    pc.complete(h2)
+    # a prompt diverging inside block 2 only reuses block 1
+    other = toks.copy()
+    other[6] = 77
+    h3 = pc.begin(other, max_match=9, max_commit=8)
+    assert h3.length == 4 and h3.new_spans == [(4, 8)]
+    h3.rows = [_fake_rows()]
+    pc.complete(h3)
+    assert pc.n_nodes == 3  # sibling block under the shared first block
+    _assert_accounting_clean(pc)
+
+
+def test_begin_caps_match_and_commit():
+    pc = PrefixCache(block_tokens=4, max_bytes=1 << 20)
+    toks = np.arange(8, dtype=np.int32)
+    h = pc.begin(toks, max_match=7, max_commit=8)
+    h.rows = [_fake_rows(), _fake_rows()]
+    pc.complete(h)
+    # max_match=7 < 8: the second block may NOT be reused even though it is
+    # committed (the engine must leave >= 1 token to prefill)
+    h2 = pc.begin(toks, max_match=7, max_commit=8)
+    assert h2.length == 4
+    pc.abort(h2)
+    # max_commit=0 (ring wrap guard): nothing planned, nothing committed
+    h3 = pc.begin(toks, max_match=0, max_commit=0)
+    assert h3.length == 0 and h3.new_spans == []
+    pc.complete(h3)
+    assert pc.n_nodes == 2
+    _assert_accounting_clean(pc)
+
+
+def test_pinned_blocks_survive_eviction():
+    pc = PrefixCache(block_tokens=2, max_bytes=1 << 20)
+    toks = np.arange(6, dtype=np.int32)
+    h = pc.begin(toks, max_match=6, max_commit=6)
+    h.rows = [_fake_rows(), _fake_rows(), _fake_rows()]
+    pc.complete(h)
+    pinned = pc.begin(toks, max_match=6, max_commit=6)
+    assert pinned.length == 6 and pc.pinned == 3
+    pc.evict_to(0)  # pinned path must survive a zero budget
+    assert pc.n_nodes == 3 and pc.counters["evictions"] == 0
+    pc.complete(pinned)
+    pc.evict_to(0)  # now the whole chain drains leaf-first
+    assert pc.n_nodes == 0 and pc.cached_bytes == 0
+    assert pc.counters["evictions"] == 3
+    _assert_accounting_clean(pc)
+
+
+def test_lru_eviction_prefers_oldest_childless():
+    pc = PrefixCache(block_tokens=2, max_bytes=1 << 30)
+    old, new = np.array([1, 2], np.int32), np.array([3, 4], np.int32)
+    for toks in (old, new):
+        h = pc.begin(toks, max_match=2, max_commit=2)
+        h.rows = [_fake_rows()]
+        pc.complete(h)
+    # touch `old` so `new` becomes the LRU victim
+    pc.complete(pc.begin(old, max_match=2, max_commit=2))
+    pc.evict_to(pc.cached_bytes - 1)  # force exactly one eviction
+    assert pc.n_nodes == 1
+    assert pc._nodes[0].key == old.tobytes()
+    _assert_accounting_clean(pc)
+
+
+def test_abort_unpins_without_commit():
+    pc = PrefixCache(block_tokens=4, max_bytes=1 << 20)
+    h = pc.begin(np.arange(8, dtype=np.int32), max_match=8, max_commit=8)
+    h.rows = [_fake_rows()]  # captured, then admission dies
+    pc.abort(h)
+    pc.abort(h)  # idempotent
+    assert pc.n_nodes == 0 and pc.counters["aborts"] == 1
+    _assert_accounting_clean(pc)
+
+
+def test_bind_refuses_mismatched_model_identity():
+    pc = PrefixCache()
+    pc.bind("model-a")
+    pc.bind("model-a")  # same identity is fine
+    with pytest.raises(ValueError, match="bound to model identity"):
+        pc.bind("model-b")
+
+
+def test_model_identity_distinguishes_policies():
+    cfg = _cfg()
+    dense = model_identity(cfg, _params("dense"))
+    bcq = model_identity(cfg, _params("bcq"))
+    ternary = model_identity(cfg, _params("ternary"))
+    assert len({dense, bcq, ternary}) == 3
+    assert model_identity(cfg, _params("bcq")) == bcq  # deterministic
+    assert model_identity(cfg, _params("bcq"), _mesh(2)) != bcq
+
+
+def test_refcount_eviction_property_randomized():
+    """Fixed-seed random interleaving of begin/complete/abort/evict_to: the
+    accounting invariants hold at every step, refs never underflow, and the
+    byte ledger always matches the live node set."""
+    rng = np.random.default_rng(0)
+    pc = PrefixCache(block_tokens=2, max_bytes=4096)
+    open_handles = []
+    for step in range(300):
+        op = rng.integers(0, 4)
+        if op == 0:
+            toks = rng.integers(0, 5, size=int(rng.integers(2, 9)))
+            h = pc.begin(toks.astype(np.int32), max_match=toks.size,
+                         max_commit=toks.size)
+            h.rows = [_fake_rows(int(rng.integers(16, 64)))
+                      for _ in h.new_spans]
+            open_handles.append(h)
+        elif op == 1 and open_handles:
+            pc.complete(open_handles.pop(int(rng.integers(len(open_handles)))))
+        elif op == 2 and open_handles:
+            pc.abort(open_handles.pop(int(rng.integers(len(open_handles)))))
+        elif op == 3:
+            pc.evict_to(int(rng.integers(0, 4096)))
+        assert pc.cached_bytes == sum(n.nbytes for n in pc._nodes)
+        assert all(n.refs >= 0 for n in pc._nodes)
+        assert pc.pinned == sum(len(h.matched) for h in open_handles)
+    for h in open_handles:
+        pc.abort(h)
+    _assert_accounting_clean(pc)
+
+
+# ---------------------------------------------------------------------------
+# warm-vs-cold bit identity across the serving grid
+# ---------------------------------------------------------------------------
+
+GRID = [
+    ("dense", None, 0),
+    ("bcq", None, 0),
+    ("bcq", SpecConfig(q_draft=2, gamma=3), 0),
+    ("ternary", None, 0),
+    ("ternary", SpecConfig(q_draft=1, gamma=2), 0),
+    ("dense", None, 2),
+    ("bcq", SpecConfig(q_draft=2, gamma=3), 2),
+    ("ternary", None, 2),
+]
+
+
+@pytest.mark.parametrize(
+    "fmt,spec,tp", GRID,
+    ids=[f"{f}-{'spec' if s else 'plain'}-tp{t or 1}" for f, s, t in GRID],
+)
+def test_warm_vs_cold_bit_identity(fmt, spec, tp):
+    """THE invariant: a second wave of identical prompts served against the
+    now-warm cache emits exactly the tokens the cold engine emits — across
+    formats, speculation and TP. Accounting is leak-free afterwards."""
+    warm = _warm_engine(fmt, tp)
+    reqs_a = _shared_prefix_requests(5)
+    _, _ = _run(warm, reqs_a, speculate=spec)  # wave 1: populate
+    hits_before = warm.prefix_cache.counters["hits"]
+    reqs_b = _shared_prefix_requests(5)  # identical prompts/seeds, fresh rids
+    _, warm_done = _run(warm, reqs_b, speculate=spec)
+    assert warm.prefix_cache.counters["hits"] > max(hits_before, 0)
+
+    _, cold_done = _run(_cold_engine(fmt, tp), _shared_prefix_requests(5),
+                        speculate=spec)
+    for r_warm, (rid_c, c_cold) in zip(reqs_b, sorted(cold_done.items())):
+        np.testing.assert_array_equal(
+            warm_done[r_warm.rid].new_tokens, c_cold.new_tokens,
+            err_msg=f"warm-cache tokens diverged ({fmt}, tp={tp})",
+        )
+    # and against solo generate for one greedy request
+    solo = _cold_engine(fmt, tp).generate(
+        reqs_b[0].prompt[None], reqs_b[0].max_new_tokens, speculate=spec,
+    )
+    np.testing.assert_array_equal(
+        warm_done[reqs_b[0].rid].new_tokens,
+        solo.tokens[0, reqs_b[0].prompt.size:],
+    )
+    _assert_accounting_clean(warm.prefix_cache)
+
+
+def test_chunked_vs_unchunked_identity():
+    """Chunked prefill is a scheduling knob, never a semantics knob: the same
+    workload through prefill_chunk=4 (with a warm cache) and through
+    whole-shot cold admission emits identical tokens."""
+    warm = _warm_engine("bcq")
+    reqs = _shared_prefix_requests(6, prefix_len=16, gen=6)
+    _, chunked_done = _run(warm, reqs, prefill_chunk=4)
+    _, cold_done = _run(_cold_engine("bcq"),
+                        _shared_prefix_requests(6, prefix_len=16, gen=6))
+    for r, (rid_c, c_cold) in zip(reqs, sorted(cold_done.items())):
+        np.testing.assert_array_equal(
+            chunked_done[r.rid].new_tokens, c_cold.new_tokens
+        )
+    assert warm.prefix_cache.counters["hits"] > 0
+    _assert_accounting_clean(warm.prefix_cache)
+
+
+def test_chunked_prefill_without_cache_identity():
+    """Chunked prefill with NO prefix cache attached also matches whole-shot
+    (the two features are independent)."""
+    eng = _cold_engine("dense")
+    reqs = _shared_prefix_requests(4, prefix_len=16, gen=5)
+    _, chunked = _run(eng, reqs, prefill_chunk=4)
+    _, whole = _run(eng, _shared_prefix_requests(4, prefix_len=16, gen=5))
+    for r, (rid_w, c_whole) in zip(reqs, sorted(whole.items())):
+        np.testing.assert_array_equal(chunked[r.rid].new_tokens,
+                                      c_whole.new_tokens)
+
+
+def test_mid_flight_eviction_survivor_identity():
+    """Evicting the entire cache between scheduler steps — while admissions
+    are pinning and committing against it — never changes tokens: installs
+    are copies, pinned paths survive, and evicted blocks just stop matching."""
+    warm = _warm_engine("dense", block_tokens=4)
+    reqs = _shared_prefix_requests(6, gen=6)
+    sched = Scheduler(warm, n_slots=2, chunk=2, prefill_chunk=4)
+    for r in reqs:
+        sched.submit(r)
+    done = {}
+    while not sched.idle:
+        for c in sched.step():
+            done[c.rid] = c
+        warm.prefix_cache.evict_to(0)       # maximum churn
+        warm.prefix_cache.max_bytes = 64 << 20
+    assert warm.prefix_cache.counters["evictions"] > 0
+    _, cold_done = _run(_cold_engine("dense"), _shared_prefix_requests(6, gen=6))
+    for r, (rid_c, c_cold) in zip(reqs, sorted(cold_done.items())):
+        np.testing.assert_array_equal(done[r.rid].new_tokens, c_cold.new_tokens)
+    _assert_accounting_clean(warm.prefix_cache)
+
+
+def test_recurrent_arch_warm_identity():
+    """RECURRENT leaves restore from the boundary snapshot (taxonomy §5): a
+    recurrent-state architecture served warm matches cold bit-for-bit."""
+    cfg = reduced(get_config("xlstm-125m"))
+    params = init_params(KEY, cfg)
+    warm = Engine(cfg, params, max_seq=48,
+                  prefix_cache=PrefixCache(block_tokens=4))
+    cold = Engine(cfg, params, max_seq=48)
+    corpus = MarkovCorpus(cfg.vocab, seed=3)
+    shared = corpus.sample(1, 12, seed=99)[0, :12]
+
+    def reqs():
+        out = []
+        for i in range(4):
+            tail = corpus.sample(1, 2 + i, seed=100 + i)[0, : 2 + i]
+            out.append(Request(
+                prompt=np.concatenate([shared, tail]).astype(np.int32),
+                max_new_tokens=5, temperature=[0.0, 0.9][i % 2], seed=7 + i,
+            ))
+        return out
+
+    _run(warm, reqs())  # populate
+    rb = reqs()
+    _, warm_done = _run(warm, rb)
+    assert warm.prefix_cache.counters["hits"] > 0
+    _, cold_done = _run(cold, reqs())
+    for r, (rid_c, c_cold) in zip(rb, sorted(cold_done.items())):
+        np.testing.assert_array_equal(warm_done[r.rid].new_tokens,
+                                      c_cold.new_tokens)
+    _assert_accounting_clean(warm.prefix_cache)
+
+
+def test_ring_arch_wrapped_prompts_bypass_cache():
+    """A ring (local-attention) cache serves correctly with a prefix cache
+    attached: prompts longer than the window bypass matching AND committing
+    (their early rows are clobbered by the wrap), short prompts still reuse,
+    and everything stays identical to the cold engine."""
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    params = init_params(KEY, cfg)
+    assert cfg.window and cfg.window < 48
+    warm = Engine(cfg, params, max_seq=48,
+                  prefix_cache=PrefixCache(block_tokens=4))
+    cold = Engine(cfg, params, max_seq=48)
+    corpus = MarkovCorpus(cfg.vocab, seed=3)
+    shared = corpus.sample(1, 8, seed=99)[0, :8]
+
+    def reqs():
+        out = []
+        for i in range(4):
+            # i=3 exceeds the window -> wrapped -> must bypass the cache
+            tlen = [2, 4, 6, cfg.window + 4][i]
+            tail = corpus.sample(1, tlen, seed=100 + i)[0, :tlen]
+            out.append(Request(
+                prompt=np.concatenate([shared, tail]).astype(np.int32),
+                max_new_tokens=5, seed=7 + i,
+            ))
+        return out
+
+    _run(warm, reqs())
+    rb = reqs()
+    _, warm_done = _run(warm, rb)
+    _, cold_done = _run(cold, reqs())
+    for r, (rid_c, c_cold) in zip(rb, sorted(cold_done.items())):
+        np.testing.assert_array_equal(warm_done[r.rid].new_tokens,
+                                      c_cold.new_tokens)
+    # the wrapped prompt committed nothing: no trie path spans past the window
+    assert all(n.end <= min(48, cfg.window) for n in warm.prefix_cache._nodes)
+    _assert_accounting_clean(warm.prefix_cache)
+
+
+# ---------------------------------------------------------------------------
+# observability + guards
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_and_trace_instrumentation():
+    """Counters mirror into the registry in lockstep, gauges track bytes and
+    trie size, and cache_hit/evict instants land on the scheduler lane."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    warm = _warm_engine("dense", block_tokens=4)
+    metrics, tracer = MetricsRegistry(), Tracer()
+    reqs = _shared_prefix_requests(5)
+    _run(warm, reqs, metrics=metrics, tracer=tracer)
+    _run(warm, _shared_prefix_requests(5), metrics=metrics, tracer=tracer)
+    pc = warm.prefix_cache
+    snap = metrics.snapshot()
+    for key, host in pc.counters.items():
+        series = snap[f"prefix_{key}_total"]["series"]
+        assert sum(s["value"] for s in series) == host, key
+    assert snap["prefix_cached_bytes"]["series"][0]["value"] == pc.cached_bytes
+    assert snap["prefix_trie_nodes"]["series"][0]["value"] == pc.n_nodes
+    assert snap["prefix_pinned_refs"]["series"][0]["value"] == 0
+    names = [e["name"] for e in tracer.to_chrome()["traceEvents"]]
+    assert "cache_hit" in names
+    pc.evict_to(0)
+    names = [e["name"] for e in tracer.to_chrome()["traceEvents"]]
+    assert "evict" in names
+
+
+def test_prefix_hit_tokens_stamped_on_lifecycle():
+    warm = _warm_engine("dense", block_tokens=4)
+    _run(warm, _shared_prefix_requests(4))
+    sched, done = _run(warm, _shared_prefix_requests(4))
+    hits = [sched.outcomes[rid].prefix_hit_tokens for rid in done]
+    assert any(h >= 4 for h in hits)
+    chunks = [sched.outcomes[rid].prefill_chunks for rid in done]
+    assert all(c == 1 for c in chunks)  # sync admission = one dispatch
+    # a cold cache + chunked admission: 14..17-token prompts over 4-token
+    # chunks take several dispatches, and the stamp records them
+    fresh = _warm_engine("dense", block_tokens=4)
+    sched2, done2 = _run(fresh, _shared_prefix_requests(4), prefill_chunk=4)
+    assert any(sched2.outcomes[rid].prefill_chunks > 1 for rid in done2)
+
+
+def test_prefix_cache_refused_on_unsupported_arch():
+    cfg = reduced(get_config("olmoe-1b-7b"))  # MoE: outside the serving gate
+    params = init_params(KEY, cfg)
+    with pytest.raises(ValueError, match="prefix_cache requires"):
+        Engine(cfg, params, max_seq=32, prefix_cache=PrefixCache())
+
+
+def test_chunked_prefill_refused_on_recurrent_arch():
+    cfg = reduced(get_config("xlstm-125m"))
+    eng = Engine(cfg, init_params(KEY, cfg), max_seq=48)
+    assert not eng.supports_chunked_prefill
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Scheduler(eng, n_slots=2, chunk=2, prefill_chunk=4)

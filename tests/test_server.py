@@ -10,6 +10,7 @@ when aiohttp is absent (the minimal CI leg)."""
 
 import asyncio
 import functools
+import gc
 
 import jax
 import numpy as np
@@ -23,6 +24,17 @@ from repro.models import init_params, reduced
 
 KEY = jax.random.PRNGKey(0)
 MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_module_state():
+    """Same rationale as test_prefix_cache: drop the module's pinned engines
+    and compiled executables at teardown so accumulated JIT state can't
+    destabilise XLA's compiler later in the serial suite."""
+    yield
+    _engine.cache_clear()
+    jax.clear_caches()
+    gc.collect()
 
 
 def _cfg():
@@ -357,3 +369,136 @@ def test_websocket_end_to_end_stream_cancel_disconnect_metrics():
     assert m["by_state"]["cancelled"] == 2
     assert m["ttft_s"]["n"] == 1
     assert m["counters"]["cancelled"] == 2
+
+
+# ---------------------------------------------------------------------------
+# HTTP SSE transport (same session core + frame schema as the WS endpoint)
+# ---------------------------------------------------------------------------
+
+
+async def _sse_frames(resp):
+    """Parse an SSE body into the JSON frames it carries."""
+    import json
+
+    frames = []
+    async for line in resp.content:
+        line = line.decode("utf-8").strip()
+        if line.startswith("data: "):
+            frames.append(json.loads(line[len("data: "):]))
+    return frames
+
+
+def test_sse_generate_end_to_end():
+    """POST /v1/generate streams the SAME frame schema the WS endpoint uses,
+    one frame per ``data:`` line: accepted -> tokens* -> done, token-identical
+    to solo generate; a malformed body is a 400 with a rejected frame."""
+    aiohttp = pytest.importorskip("aiohttp")
+    from repro.launch.server import bound_port, run_server
+
+    eng = _engine()
+    p = _prompt(8)
+    solo = eng.generate(p[None], 8)
+    expect = [int(t) for t in solo.tokens[0, p.size :]]
+
+    async def run():
+        session = ServeSession(eng, n_slots=2, chunk=3)
+        async with session:
+            runner = await run_server(session, port=0)
+            base = f"http://127.0.0.1:{bound_port(runner)}"
+            try:
+                async with aiohttp.ClientSession() as client:
+                    body = {"prompt": [int(t) for t in p],
+                            "max_new_tokens": 8}
+                    async with client.post(
+                        f"{base}/v1/generate", json=body
+                    ) as r:
+                        assert r.status == 200
+                        assert r.headers["Content-Type"].startswith(
+                            "text/event-stream"
+                        )
+                        frames = await _sse_frames(r)
+                    async with client.post(
+                        f"{base}/v1/generate", json={"max_new_tokens": 4}
+                    ) as r:
+                        bad_status, bad = r.status, await r.json()
+            finally:
+                await runner.cleanup()
+        return frames, bad_status, bad
+
+    frames, bad_status, bad = _go(run(), timeout=180.0)
+    assert frames[0]["type"] == "accepted"
+    got = [t for f in frames if f["type"] == "tokens" for t in f["tokens"]]
+    assert got == expect
+    assert frames[-1]["type"] == "done"
+    assert frames[-1]["status"] == "finished" and frames[-1]["n_tokens"] == 8
+    assert bad_status == 400 and bad["type"] == "rejected"
+    assert "bad request" in bad["reason"]
+
+
+def test_sse_disconnect_cancels_request():
+    """Dropping the SSE connection mid-stream cancels the request at the
+    next chunk boundary — disconnect-as-cancel, same contract as WS."""
+    aiohttp = pytest.importorskip("aiohttp")
+    from repro.launch.server import bound_port, run_server
+
+    eng = _engine()
+    p = _prompt(9)
+
+    async def run():
+        session = ServeSession(eng, n_slots=1, chunk=1)
+        async with session:
+            runner = await run_server(session, port=0)
+            base = f"http://127.0.0.1:{bound_port(runner)}"
+            try:
+                async with aiohttp.ClientSession() as client:
+                    resp = await client.post(
+                        f"{base}/v1/generate",
+                        json={"prompt": [int(t) for t in p],
+                              "max_new_tokens": 48},
+                    )
+                    # read until the first token frame, then hang up
+                    async for line in resp.content:
+                        if b'"tokens"' in line:
+                            break
+                    resp.close()
+                    await _await_true(
+                        lambda: session.sched.counters["cancelled"] >= 1
+                    )
+                    m = session.metrics()
+            finally:
+                await runner.cleanup()
+        return m
+
+    m = _go(run(), timeout=180.0)
+    assert m["by_state"].get("cancelled") == 1
+
+
+def test_session_prefix_cache_chunked_prefill_identity():
+    """The serving session wires prefill_chunk through to the scheduler and
+    the engine's prefix cache serves warm requests bit-identically — the §12
+    invariant holds end-to-end through the async front end."""
+    from repro.infer import PrefixCache
+
+    eng = Engine(
+        _cfg(), init_params(KEY, _cfg()), max_seq=MAX_SEQ,
+        prefix_cache=PrefixCache(block_tokens=4),
+    )
+    p = _prompt(10, plen=12)
+    solo = _engine().generate(p[None], 8)
+    expect = [int(t) for t in solo.tokens[0, p.size :]]
+
+    async def run():
+        async with ServeSession(eng, n_slots=2, chunk=3,
+                                prefill_chunk=4) as sess:
+            cold = await sess.submit_stream(Request(prompt=p, max_new_tokens=8))
+            t_cold, last_cold = await cold.drain()
+            warm = await sess.submit_stream(Request(prompt=p, max_new_tokens=8))
+            t_warm, last_warm = await warm.drain()
+        return t_cold, last_cold, t_warm, last_warm
+
+    t_cold, last_cold, t_warm, last_warm = _go(run())
+    assert last_cold.kind == "done" and last_warm.kind == "done"
+    assert list(t_cold) == expect and list(t_warm) == expect
+    st = eng.prefix_cache.stats()
+    assert st["hits"] >= 1 and st["pinned"] == 0
+    assert st["hits"] + st["misses"] == st["commits"] + st["aborts"]
